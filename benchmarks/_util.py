@@ -1,0 +1,47 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+# The paper evaluates in double precision; every benchmark that asks for
+# float64 needs x64 enabled before the first trace.
+jax.config.update("jax_enable_x64", True)
+
+
+def block(x):
+    return jax.tree_util.tree_map(
+        lambda l: l.block_until_ready() if hasattr(l, "block_until_ready")
+        else l, x)
+
+
+def timeit(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall-clock seconds of ``fn()`` (device-synchronized)."""
+    for _ in range(warmup):
+        block(fn())
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        block(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+class Csv:
+    """Collects (benchmark, case, metric, value) rows and prints CSV."""
+
+    def __init__(self):
+        self.rows: list[tuple[str, str, str, str]] = []
+
+    def add(self, bench: str, case: str, metric: str, value) -> None:
+        if isinstance(value, float):
+            value = f"{value:.6g}"
+        self.rows.append((bench, case, metric, str(value)))
+        print(f"{bench},{case},{metric},{value}", flush=True)
+
+    def header(self) -> None:
+        print("benchmark,case,metric,value", flush=True)

@@ -1,0 +1,30 @@
+"""Algorithm 1 throughput: the batched count queries are two passes and
+linear time — rows/second should be flat across scales."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.counts import compute_counts
+from repro.core.join_tree import build_plan
+from repro.data.relational import favorita_like
+
+from ._util import Csv, timeit
+
+
+def run(csv: Csv, *, fast: bool = False) -> None:
+    scales = (500, 2000) if fast else (500, 2000, 8000)
+    for scale in scales:
+        tree = favorita_like(scale=scale)
+        plan = build_plan(tree)
+        rows = sum(nd.data.shape[0] for nd in plan.nodes)
+        t = timeit(lambda: compute_counts(plan, dtype=jnp.float64))
+        csv.add("counts", f"scale{scale}", "rows", rows)
+        csv.add("counts", f"scale{scale}", "seconds", t)
+        csv.add("counts", f"scale{scale}", "rows_per_s", rows / t)
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

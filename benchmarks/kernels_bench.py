@@ -1,0 +1,57 @@
+"""Kernel-layer benchmark: FiGaRo inner loop (segmented head/tail) and the
+post-processing panel QR.
+
+On this CPU container the Pallas kernels execute in ``interpret=True`` mode
+(Python emulation — NOT indicative of TPU speed); wall time is reported for
+the XLA path that actually runs here, and the kernel path is checked for
+agreement. On TPU the kernel path replaces the XLA scan with one fused
+HBM→VMEM pass (see EXPERIMENTS.md §Perf for the roofline accounting).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.heads_tails import segmented_head_tail
+from repro.core.postprocess import blocked_qr_r
+from repro.kernels.panel_qr import ops as pq_ops, ref as pq_ref
+
+from ._util import Csv, timeit
+
+
+def run(csv: Csv, *, fast: bool = False) -> None:
+    rng = np.random.default_rng(0)
+    sizes = [(4096, 64), (16384, 64)] if fast else \
+        [(4096, 64), (16384, 64), (65536, 64)]
+    for m, n in sizes:
+        data = jnp.array(rng.normal(size=(m, n)), jnp.float32)
+        w = jnp.array(rng.uniform(0.5, 2.0, size=m), jnp.float32)
+        seg = np.sort(rng.integers(0, m // 16, size=m)).astype(np.int32)
+        pos = np.zeros(m, np.int32)
+        pos[1:] = np.where(seg[1:] == seg[:-1], 1, 0)
+        pos = np.cumsum(pos) * (pos > 0)  # position within segment
+        args = (data, w, jnp.array(seg), jnp.array(pos), int(seg.max()) + 1)
+        t = timeit(lambda: segmented_head_tail(*args))
+        case = f"headtail_{m}x{n}"
+        csv.add("kernels", case, "xla_path_s", t)
+        csv.add("kernels", case, "rows_per_s", m / t)
+        if m <= 4096:  # interpret mode is slow; validate on the small size
+            h1, t1, _ = segmented_head_tail(*args, use_kernel=False)
+            h2, t2, _ = segmented_head_tail(*args, use_kernel=True)
+            csv.add("kernels", case, "kernel_max_abs_err",
+                    float(jnp.abs(t1 - t2).max()))
+    for m, nb in [(512, 64)] if fast else [(512, 64), (2048, 128)]:
+        a = jnp.array(rng.normal(size=(m, nb)), jnp.float32)
+        t = timeit(lambda: blocked_qr_r(a, panel=32))
+        csv.add("kernels", f"panelqr_{m}x{nb}", "xla_path_s", t)
+        v1, b1, r1 = pq_ops.panel_qr(a[:, :32])
+        v2, b2, r2 = pq_ref.panel_qr_ref(a[:, :32])
+        csv.add("kernels", f"panelqr_{m}x{nb}", "kernel_max_abs_err",
+                float(jnp.abs(r1 - r2).max()))
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

@@ -1,0 +1,57 @@
+"""LM dry-run roofline table: reads benchmarks/results/dryrun/*.json
+(produced by ``python -m repro.launch.dryrun``) and prints the per-cell
+roofline terms — the §Roofline deliverable in EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from ._util import Csv
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_records(mesh: str = "16x16") -> list[dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(fn) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def run(csv: Csv, *, fast: bool = False) -> None:
+    recs = load_records()
+    if not recs:
+        csv.add("lm_roofline", "all", "status",
+                "no dry-run records (run: python -m repro.launch.dryrun --all)")
+        return
+    for r in recs:
+        case = f"{r['arch']}:{r['shape']}"
+        if r["status"] == "skipped":
+            csv.add("lm_roofline", case, "status", "skip")
+            continue
+        if r["status"] != "ok":
+            csv.add("lm_roofline", case, "status", f"ERROR:{r.get('error')}")
+            continue
+        if "compute_s" not in r:
+            csv.add("lm_roofline", case, "status", "compile-only")
+            continue
+        csv.add("lm_roofline", case, "compute_s", r["compute_s"])
+        csv.add("lm_roofline", case, "memory_s", r["memory_s"])
+        csv.add("lm_roofline", case, "collective_s", r["collective_s"])
+        csv.add("lm_roofline", case, "dominant", r["dominant"])
+        csv.add("lm_roofline", case, "mfu", r["mfu"])
+        csv.add("lm_roofline", case, "useful_flops_fraction",
+                r["useful_flops_fraction"])
+        csv.add("lm_roofline", case, "mem_gb_per_dev",
+                r["peak_memory_per_device"] / 1e9)
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

@@ -1,0 +1,58 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  python -m benchmarks.run            # full set
+  python -m benchmarks.run --fast     # reduced sizes (CI)
+  python -m benchmarks.run --only accuracy,scaling
+
+Emits ``benchmark,case,metric,value`` CSV on stdout.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (accuracy, cartesian_grid, counts_bench, figaro_runtime,
+               join_tree_effect, kernels_bench, lm_roofline, scaling)
+from ._util import Csv
+
+BENCHES = {
+    "figaro_runtime": figaro_runtime.run,    # Fig 4
+    "cartesian_grid": cartesian_grid.run,    # Fig 5
+    "scaling": scaling.run,                  # Fig 6
+    "join_tree_effect": join_tree_effect.run,  # Table 2
+    "accuracy": accuracy.run,                # Table 3
+    "counts": counts_bench.run,              # Algorithm 1 (ours)
+    "kernels": kernels_bench.run,            # Pallas layer (ours)
+    "lm_roofline": lm_roofline.run,          # §Roofline table (ours)
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(BENCHES)
+    csv = Csv()
+    csv.header()
+    failed = []
+    for name, fn in BENCHES.items():
+        if name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn(csv, fast=args.fast)
+            csv.add(name, "_total", "bench_wall_s", time.time() - t0)
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            csv.add(name, "_total", "ERROR", f"{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

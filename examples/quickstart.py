@@ -1,0 +1,66 @@
+"""Quickstart: QR decomposition over a database join, without the join.
+
+Builds a small star-schema database (fact table + 2 dimension tables),
+computes the upper-triangular R of the join matrix two ways:
+
+  1. FiGaRo (this library): counts -> heads/tails -> R0 -> TSQR post-process,
+     touching only the INPUT relations;
+  2. the classical baseline: materialize the join, Householder QR;
+
+and shows they agree while FiGaRo reads ~10x fewer values.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.join_tree import JoinTree, build_plan
+from repro.core.materialize import join_output_rows, materialize_join
+from repro.core.qr import figaro_qr, materialized_qr
+from repro.core.relation import Database, full_reduce
+
+rng = np.random.default_rng(0)
+
+# --- 1. a database: Orders + Customers + Products + Reviews (many-to-many) --
+n_cust, n_prod, n_orders = 50, 30, 2000
+tables = {
+    "Orders": ({"cust": rng.integers(0, n_cust, n_orders),
+                "prod": rng.integers(0, n_prod, n_orders)},
+               rng.normal(size=(n_orders, 2)), ["amount", "qty"]),
+    "Customers": ({"cust": np.arange(n_cust)},
+                  rng.normal(size=(n_cust, 3)), ["age", "income", "tenure"]),
+    "Products": ({"prod": np.arange(n_prod)},
+                 rng.normal(size=(n_prod, 2)), ["price", "weight"]),
+    # many-to-many: ~6 reviews per product -> the join blows up 6x
+    "Reviews": ({"prod": rng.integers(0, n_prod, n_prod * 6)},
+                rng.normal(size=(n_prod * 6, 1)), ["stars"]),
+}
+db = Database.from_arrays(tables)
+edges = [("Orders", "Customers"), ("Orders", "Products"),
+         ("Products", "Reviews")]
+db = full_reduce(db, edges)                      # drop dangling tuples
+tree = JoinTree.from_edges(db, "Orders", edges)  # fact table at the root
+plan = build_plan(tree)                          # static index structure
+
+# --- 2. FiGaRo: R without materializing the join ----------------------------
+r_figaro = figaro_qr(plan, dtype=jnp.float64)
+
+# --- 3. classical baseline: materialize, then QR ----------------------------
+a = materialize_join(tree)
+r_baseline = materialized_qr(tree)
+
+err = np.abs(np.asarray(r_figaro) - np.asarray(r_baseline)).max() \
+    / np.abs(np.asarray(r_baseline)).max()
+
+rows_in = db.total_rows
+rows_join = join_output_rows(tree)
+print(f"input rows          : {rows_in}")
+print(f"join rows           : {rows_join}  ({rows_join / rows_in:.1f}x blowup)")
+print(f"R shape             : {r_figaro.shape}")
+print(f"max rel. difference : {err:.2e}")
+assert err < 1e-10
+print("OK — FiGaRo matches the materialized-join QR without building the join.")

@@ -1,0 +1,56 @@
+"""Batched serving example: prefill a batch of prompts, then decode with the
+per-architecture KV/state caches (attention KV, Mamba conv+SSM state, RWKV
+wkv state, sliding-window ring buffers).
+
+Exercises the same make_prefill / make_decode_step functions the multi-pod
+dry-run lowers for the decode_32k / long_500k shapes.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py [--arch rwkv6-1.6b]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import transformer as tf
+from repro.train.serve import sample_loop
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", choices=ARCH_NAMES, default="granite-3-8b")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--prompt-len", type=int, default=32)
+ap.add_argument("--steps", type=int, default=48)
+args = ap.parse_args()
+
+cfg = get_config(args.arch, smoke=True)
+params = tf.init_params(jax.random.PRNGKey(0), cfg)
+
+batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                      (args.batch, args.prompt_len), 0,
+                                      cfg.vocab)}
+if cfg.is_enc_dec:
+    batch["frames"] = jax.random.normal(
+        jax.random.PRNGKey(2), (args.batch, cfg.encoder_len, cfg.d_model),
+        jnp.bfloat16)
+if cfg.patch_positions:
+    batch["patches"] = jax.random.normal(
+        jax.random.PRNGKey(3), (args.batch, cfg.patch_positions, cfg.d_model),
+        jnp.bfloat16)
+
+max_len = args.prompt_len + args.steps + cfg.patch_positions + 1
+t0 = time.time()
+toks = sample_loop(params, cfg, batch, steps=args.steps, max_len=max_len,
+                   temperature=0.8, key=jax.random.PRNGKey(4))
+dt = time.time() - t0
+toks = np.asarray(toks)
+assert toks.shape == (args.batch, args.steps)
+assert (toks >= 0).all() and (toks < cfg.vocab).all()
+tput = args.batch * args.steps / dt
+print(f"arch           : {cfg.name}")
+print(f"generated      : {toks.shape} tokens  (first row: {toks[0][:12]}...)")
+print(f"decode rate    : {tput:.1f} tok/s total (1 CPU core, reduced config)")
+print("OK — batched prefill+decode with per-arch caches.")

@@ -1,0 +1,17 @@
+"""FiGaRo core: Givens QR decomposition over relational joins (paper's contribution)."""
+
+from .relation import Database, Relation, full_reduce  # noqa: F401
+from .join_tree import JoinTree, FigaroPlan, build_plan  # noqa: F401
+from .materialize import materialize_join, join_output_rows  # noqa: F401
+from .counts import compute_counts, compute_counts_reference  # noqa: F401
+from .heads_tails import (  # noqa: F401
+    head, tail, head_tail, segmented_head_tail, givens_sequence,
+)
+from .figaro import figaro_r0, figaro_r0_fn  # noqa: F401
+from .postprocess import (  # noqa: F401
+    householder_qr_r, blocked_qr_r, tsqr_r, postprocess_r0, normalize_sign,
+)
+from .qr import figaro_qr, materialized_qr, givens_qr_r  # noqa: F401
+from .svd import (  # noqa: F401
+    svd_over_join, pca_over_join, least_squares_over_join, PCAResult,
+)

@@ -1,0 +1,176 @@
+"""Distributed FiGaRo: THIN/TSQR on the mesh + fact-partitioned multi-pod QR.
+
+Two levels, mirroring the paper's own structure (§7 THIN, §8 Exp 2):
+
+1. **Mesh post-processing** (`distributed_postprocess_r0`): R₀'s rows are
+   sharded over a mesh axis; each shard runs a local blocked-Householder QR,
+   then a butterfly ``ppermute`` combine (log₂ P rounds of QR on stacked
+   [2n × n] triangles) leaves every shard holding the identical final R.
+   This is the paper's dominant cost parallelized with `shard_map` — the TPU
+   version of THIN's per-thread Givens + parallel combine.
+
+2. **Fact-table domain partitioning** (`partitioned_figaro_qr`): the join is a
+   disjoint union over partitions of the fact (root) relation's rows (key
+   groups kept whole; dimension relations replicated) — so
+   ``A = vstack(A_1..A_P)`` and ``R = tsqr-combine(R_1..R_P)``. Each partition
+   runs the full FiGaRo pipeline independently (in production: one partition
+   per pod, SPMD; here: per-partition jit programs + the same combine). This
+   is how FiGaRo scales past a single pod, and it is *elastic*: P is chosen at
+   launch from the devices that exist.
+
+Orthogonal-freedom note: any composition of orthogonal reductions yields the
+same R up to row signs (tests pin signs via `normalize_sign` and check the
+Gram invariant), which is exactly the freedom the paper exploits.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .figaro import figaro_r0
+from .join_tree import JoinTree, build_plan
+from .postprocess import blocked_qr_r, householder_qr_r, normalize_sign, tsqr_r
+from .relation import Database, Relation
+
+__all__ = [
+    "butterfly_qr_combine",
+    "distributed_postprocess_r0",
+    "distributed_qr_r",
+    "partition_fact_table",
+    "partitioned_figaro_qr",
+]
+
+
+def butterfly_qr_combine(r_local: jnp.ndarray, axis_name: str,
+                         axis_size: int, leaf_qr=householder_qr_r) -> jnp.ndarray:
+    """Inside shard_map: combine per-shard R factors so all shards hold the
+    final R. log₂(P) rounds; round d stacks each shard's R with its distance-d
+    butterfly partner's and re-triangularizes ([2n, n] QR)."""
+    n = r_local.shape[-1]
+    r = r_local
+    d = 1
+    while d < axis_size:
+        perm = [(i, i ^ d) for i in range(axis_size)]
+        r_other = jax.lax.ppermute(r, axis_name, perm)
+        # Stable stacking order (lower index first) keeps all shards bitwise
+        # identical after each round.
+        idx = jax.lax.axis_index(axis_name)
+        lo = jnp.where(idx < (idx ^ d), r, r_other)
+        hi = jnp.where(idx < (idx ^ d), r_other, r)
+        r = leaf_qr(jnp.concatenate([lo, hi], axis=0))
+        d *= 2
+    return r
+
+
+def distributed_postprocess_r0(
+    r0: jnp.ndarray,
+    mesh: Mesh,
+    axis: str = "data",
+    *,
+    panel: int = 32,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """R₀ (M×N) → R (N×N) with rows sharded over ``mesh[axis]`` (THIN on TPU)."""
+    m, n = r0.shape
+    p = mesh.shape[axis]
+    mp = -(-m // p) * p
+    if mp != m:
+        r0 = jnp.concatenate([r0, jnp.zeros((mp - m, n), r0.dtype)], axis=0)
+
+    local_qr = functools.partial(blocked_qr_r, panel=panel,
+                                 use_kernel=use_kernel)
+
+    def shard_fn(block):  # [mp/p, n] per shard
+        r_local = local_qr(block)
+        return butterfly_qr_combine(r_local, axis, p, leaf_qr=householder_qr_r)
+
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=P(axis, None),
+        out_specs=P(axis, None),  # each shard returns its (identical) R
+    )
+    out = fn(r0)  # [p*n, n] stacked identical copies
+    return normalize_sign(out[:n])
+
+
+def distributed_qr_r(a: jnp.ndarray, mesh: Mesh, axis: str = "data",
+                     **kw) -> jnp.ndarray:
+    """General tall-skinny distributed QR (used by optim.orthogonal too)."""
+    return distributed_postprocess_r0(a, mesh, axis, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Multi-pod scaling: fact-table domain partitioning.
+# ---------------------------------------------------------------------------
+
+
+def partition_fact_table(tree: JoinTree, num_parts: int) -> list[JoinTree]:
+    """Split the root relation's rows into ``num_parts`` contiguous chunks
+    (whole key groups; paper §8 Exp 2 'domain parallelism'), replicating the
+    other relations. Empty chunks are dropped."""
+    db = tree.db
+    root = db[tree.root]
+    # Root must be grouped by its sort order for contiguous whole groups;
+    # sort exactly as build_plan would (no parent => canonical key order).
+    root_sorted = root.sorted_by(root.key_attrs)
+    m = root_sorted.num_rows
+    if root.key_attrs:
+        codes = np.zeros(m, dtype=np.int64)
+        for a in root.key_attrs:
+            codes = codes * (int(root_sorted.key_col(a).max()) + 1) + \
+                root_sorted.key_col(a)
+        boundaries = np.nonzero(np.r_[True, codes[1:] != codes[:-1]])[0]
+    else:
+        boundaries = np.arange(m)
+    # Cut at group starts nearest to equal row counts.
+    cuts = [0]
+    for k in range(1, num_parts):
+        target = k * m // num_parts
+        j = int(boundaries[np.searchsorted(boundaries, target)]) \
+            if target <= boundaries[-1] else m
+        cuts.append(max(j, cuts[-1]))
+    cuts.append(m)
+    trees = []
+    for lo, hi in zip(cuts[:-1], cuts[1:]):
+        if hi <= lo:
+            continue
+        part = Relation(root.name, root.key_attrs, root.data_attrs,
+                        root_sorted.keys[lo:hi], root_sorted.data[lo:hi])
+        rels = dict(db.relations)
+        rels[root.name] = part
+        sub_db = Database(rels)
+        # Dimension rows that no longer join with this fact chunk must be
+        # dropped (full reduction per partition).
+        from .relation import full_reduce
+        sub_db = full_reduce(sub_db, tree.edges())
+        trees.append(JoinTree(sub_db, dict(tree.parent)))
+    return trees
+
+
+def partitioned_figaro_qr(
+    tree: JoinTree,
+    num_parts: int,
+    *,
+    dtype=jnp.float64,
+    method: str = "tsqr",
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """FiGaRo over ``num_parts`` fact partitions + TSQR combine.
+
+    Per-partition programs are independent (different static shapes — in
+    production each runs on its own pod); the combine stacks the partial R
+    factors and re-triangularizes.
+    """
+    from .qr import figaro_qr
+
+    parts = partition_fact_table(tree, num_parts)
+    rs = [figaro_qr(build_plan(t), dtype=dtype, method=method,
+                    use_kernel=use_kernel) for t in parts]
+    stacked = jnp.concatenate(rs, axis=0)
+    return normalize_sign(tsqr_r(stacked, leaf_rows=max(
+        r.shape[0] for r in rs)))

@@ -1,0 +1,136 @@
+"""FiGaRo (paper §6, Algorithm 2): pushing Givens rotations past the join.
+
+Bottom-up over the join tree; per node:
+
+  HEADS_AND_TAILS            per-join-key head/tail of the node's data columns;
+                             tails scaled by √Φ° go to the output, heads into
+                             the carried `Data` matrix (one row per key X̄_i).
+  PROCESS_AND_JOIN_CHILDREN  gather children's carried heads through the key
+                             lookup, apply the cross-subtree scale products
+                             (lines 21–26 of Algorithm 2).
+  PROJECT_AWAY_JOIN_ATTRS    generalized head/tail over `Data` weighted by the
+                             carried scales; generalized tails scaled by √Φ↑ go
+                             to the output, heads (one row per X̄_p) are carried
+                             to the parent with scales √Φ↓.
+
+The result ``R₀`` is almost upper-triangular with at most M non-zero rows and
+satisfies ``A[:, Ȳ] = Q·[R₀; 0]`` for orthogonal Q (Theorem 6.1) — equivalently
+``R₀ᵀR₀ == AᵀA``, the invariant the tests enforce.
+
+All row/segment bookkeeping is static (from the `FigaroPlan`), so this function
+jits; every node's transform is independent per key block, which is exactly the
+paper's parallelism — on TPU it vectorizes instead of threading.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .counts import compute_counts
+from .heads_tails import segmented_head_tail
+from .join_tree import FigaroPlan
+
+__all__ = ["figaro_r0", "figaro_r0_fn"]
+
+
+def figaro_r0(
+    plan: FigaroPlan,
+    data: Sequence[jnp.ndarray] | None = None,
+    *,
+    dtype=jnp.float32,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """Run Algorithm 2; returns R₀ with static shape [plan.r0_rows, plan.num_cols].
+
+    ``data[i]`` overrides node i's data matrix (same row order as the plan) —
+    used for jit arguments and for propagating gradients through FiGaRo.
+    """
+    nodes = plan.nodes
+    if data is None:
+        data = [jnp.asarray(nd.data, dtype=dtype) for nd in nodes]
+    else:
+        data = [jnp.asarray(d, dtype=dtype) for d in data]
+    counts = compute_counts(plan, dtype=dtype)
+
+    # Carried state per node (filled children-first).
+    carried_data: dict[int, jnp.ndarray] = {}
+    carried_scales: dict[int, jnp.ndarray] = {}
+    out_blocks: list[tuple[int, int, jnp.ndarray]] = []  # (row0, col0, block)
+    row_acc = 0
+
+    def emit(col0: int, block: jnp.ndarray) -> None:
+        nonlocal row_acc
+        out_blocks.append((row_acc, col0, block))
+        row_acc += block.shape[0]
+
+    for idx in reversed(plan.preorder):  # children strictly before parents
+        nd = nodes[idx]
+        cnt = counts[idx]
+        x = data[idx]
+
+        # --- HEADS_AND_TAILS (lines 11-16) --------------------------------
+        ones = jnp.ones((nd.m,), dtype=dtype)
+        heads, tails, _ = segmented_head_tail(
+            x, ones, jnp.asarray(nd.row_to_group), jnp.asarray(nd.pos_in_group),
+            nd.K, use_kernel=use_kernel)
+        phi_circ_row = cnt["phi_circ"][jnp.asarray(nd.row_to_group)]
+        emit(nd.col_start, tails * jnp.sqrt(phi_circ_row)[:, None])
+
+        scales = jnp.sqrt(cnt["rpk"])  # √|S_i^x̄|, one per key
+        width = nd.subtree_width
+        # --- PROCESS_AND_JOIN_CHILDREN (lines 17-26) ----------------------
+        if nd.children:
+            gathered = []  # (rel_col0, data [K, w_ch], scale [K])
+            for ch in nd.children:
+                lookup = jnp.asarray(nd.child_lookup[ch])
+                gathered.append((
+                    nodes[ch].subtree_start - nd.subtree_start,
+                    carried_data.pop(ch)[lookup],
+                    carried_scales.pop(ch)[lookup],
+                ))
+            prod_all = functools.reduce(jnp.multiply, [s for _, _, s in gathered])
+            parts = [(0, heads * prod_all[:, None])]
+            for j, (rel0, dj, sj) in enumerate(gathered):
+                prod_except = functools.reduce(
+                    jnp.multiply,
+                    [s for k, (_, _, s) in enumerate(gathered) if k != j],
+                    scales)  # scales = √rpk_i  (line 24's `scales[x̄_i]` factor)
+                parts.append((rel0, dj * prod_except[:, None]))
+            data_mat = jnp.zeros((nd.K, width), dtype=dtype)
+            for rel0, block in parts:
+                data_mat = data_mat.at[:, rel0:rel0 + block.shape[1]].set(block)
+            scales = scales * prod_all  # line 26
+        else:
+            data_mat = heads  # width == n for a leaf
+
+        # --- PROJECT_AWAY_JOIN_ATTRIBUTES (lines 27-34) / root (lines 7-8) -
+        if nd.parent >= 0:
+            gheads, gtails, _ = segmented_head_tail(
+                data_mat, scales, jnp.asarray(nd.group_to_pgroup),
+                jnp.asarray(nd.pos_in_pgroup), nd.P, use_kernel=use_kernel)
+            phi_up_group = cnt["phi_up"][jnp.asarray(nd.group_to_pgroup)]
+            emit(nd.subtree_start, gtails * jnp.sqrt(phi_up_group)[:, None])
+            carried_data[idx] = gheads
+            carried_scales[idx] = jnp.sqrt(cnt["phi_down"])
+        else:
+            emit(nd.subtree_start, data_mat)
+
+    assert row_acc == plan.r0_rows, (row_acc, plan.r0_rows)
+    r0 = jnp.zeros((plan.r0_rows, plan.num_cols), dtype=dtype)
+    for row0, col0, block in out_blocks:
+        r0 = r0.at[row0:row0 + block.shape[0],
+                   col0:col0 + block.shape[1]].set(block)
+    return r0
+
+
+def figaro_r0_fn(plan: FigaroPlan, *, dtype=jnp.float32, use_kernel: bool = False):
+    """A jittable closure ``data_list -> R₀`` for a fixed plan."""
+
+    def fn(data: Sequence[jnp.ndarray]) -> jnp.ndarray:
+        return figaro_r0(plan, data, dtype=dtype, use_kernel=use_kernel)
+
+    return jax.jit(fn)

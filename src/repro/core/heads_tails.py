@@ -1,0 +1,188 @@
+"""Heads and tails (paper §3): block effects of Givens-rotation sequences.
+
+``head(A, v)`` / ``tail(A, v)`` implement Definition 3.4 (the unweighted
+Definition 3.2 is the ``v = 1`` special case). Together they form a *weighted
+Helmert transform*: the orthogonal matrix ``G = R_m … R_2`` of Lemma 3.5, so
+
+    G @ [S⊗v | A]  ==  [ ‖v‖₂·S  head(A,v) ]
+                       [   0     tail(A,v) ]
+
+`segmented_head_tail` applies the transform independently per contiguous
+segment of rows (one segment per join key) — the vectorized form FiGaRo needs.
+`givens_sequence` builds the explicit rotation sequence (test oracle: applying
+it row-by-row must reproduce head/tail bit-for-bit-ish).
+
+Numerics note (paper observation (3)): head/tail never squares *data* values —
+only the weights are squared — which is where FiGaRo's accuracy edge over
+Householder-on-the-join comes from.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "head",
+    "tail",
+    "head_tail",
+    "segmented_head_tail",
+    "segmented_cumsum",
+    "givens_rotation",
+    "givens_sequence",
+]
+
+
+def head(a: jnp.ndarray, v: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Generalized head ``H(A, v) = (1/‖v‖₂) Σᵢ vᵢ A[i,:]`` — one row."""
+    a = jnp.asarray(a)
+    if v is None:
+        return jnp.sum(a, axis=0) / jnp.sqrt(a.shape[0])
+    v = jnp.asarray(v)
+    return (v @ a) / jnp.linalg.norm(v)
+
+
+def tail(a: jnp.ndarray, v: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Generalized tail ``T(A, v)`` — (m-1) rows (Definition 3.4).
+
+    Row ``j`` (1-based, j∈[m-1]) is
+      ( ‖v₁..ⱼ‖·A[j+1,:] − vⱼ₊₁·(Σᵢ≤ⱼ vᵢA[i,:])/‖v₁..ⱼ‖ ) / ‖v₁..ⱼ₊₁‖.
+    """
+    a = jnp.asarray(a)
+    m = a.shape[0]
+    if v is None:
+        v = jnp.ones((m,), dtype=a.dtype)
+    v = jnp.asarray(v, dtype=a.dtype)
+    w2 = v * v
+    c_incl = jnp.cumsum(w2)  # ‖v₁..ⱼ‖² at j (inclusive)
+    s_incl = jnp.cumsum(v[:, None] * a, axis=0)
+    c_excl = c_incl - w2
+    s_excl = s_incl - v[:, None] * a
+    c_excl_safe = jnp.where(c_excl > 0, c_excl, 1.0)
+    t = (jnp.sqrt(c_excl_safe)[:, None] * a
+         - v[:, None] * s_excl / jnp.sqrt(c_excl_safe)[:, None])
+    t = t / jnp.sqrt(c_incl)[:, None]
+    return t[1:]
+
+
+def head_tail(a: jnp.ndarray, v: jnp.ndarray | None = None):
+    return head(a, v), tail(a, v)
+
+
+# ---------------------------------------------------------------------------
+# Segmented (per-join-key) version — FiGaRo's workhorse.
+# ---------------------------------------------------------------------------
+
+
+def segmented_cumsum(x: jnp.ndarray, first_flag: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive cumsum that restarts wherever ``first_flag`` is True.
+
+    Implemented with an associative scan (no subtract-the-base trick), so long
+    arrays do not suffer cross-segment cancellation — this mirrors what the
+    Pallas kernel does natively on TPU.
+    """
+    flags = first_flag
+    if x.ndim == 2:
+        flags = first_flag[:, None]
+    flags = jnp.broadcast_to(flags, x.shape)
+
+    def combine(a, b):
+        fa, xa = a
+        fb, xb = b
+        return fa | fb, xb + jnp.where(fb, jnp.zeros_like(xa), xa)
+
+    _, out = jax.lax.associative_scan(combine, (flags, x), axis=0)
+    return out
+
+
+def segmented_head_tail(
+    data: jnp.ndarray,
+    weights: jnp.ndarray,
+    seg_id: jnp.ndarray,
+    pos_in_seg: jnp.ndarray,
+    num_segments: int,
+    *,
+    use_kernel: bool = False,
+):
+    """Per-segment generalized head & tail over contiguous row segments.
+
+    Args:
+      data: [m, n]; rows of all segments, concatenated (segment-sorted).
+      weights: [m] strictly positive weights ``v``.
+      seg_id: [m] int — segment of each row (non-decreasing).
+      pos_in_seg: [m] int — 0 for the first row of a segment.
+      num_segments: static segment count K.
+      use_kernel: route the segmented scan through the Pallas kernel
+        (`repro.kernels.head_tail`) instead of the XLA associative scan.
+
+    Returns:
+      heads: [K, n]   — H(seg, v_seg)
+      tails: [m, n]   — row r holds T(seg, v_seg)[pos-1] for pos>0, else 0
+      norms: [K]      — ‖v_seg‖₂ (the scaling Lemma 3.5 applies to the S part)
+    """
+    m, _ = data.shape
+    dtype = data.dtype
+    weights = weights.astype(dtype)
+    first = pos_in_seg == 0
+    w2 = weights * weights
+    wa = data * weights[:, None]
+
+    if use_kernel:
+        from repro.kernels.head_tail import ops as ht_ops
+        c_incl = segmented_cumsum(w2, first)
+        c_excl = c_incl - w2
+        c_excl_safe = jnp.where(pos_in_seg > 0, c_excl, 1.0)
+        coef_a = jnp.sqrt(c_excl_safe / c_incl)
+        coef_b = -weights / jnp.sqrt(c_excl_safe * c_incl)
+        tails = ht_ops.segmented_tail(data, wa, first, coef_a, coef_b)
+    else:
+        c_incl = segmented_cumsum(w2, first)
+        s_incl = segmented_cumsum(wa, first)
+        c_excl = c_incl - w2
+        s_excl = s_incl - wa
+        c_excl_safe = jnp.where(pos_in_seg > 0, c_excl, 1.0)
+        tails = (jnp.sqrt(c_excl_safe)[:, None] * data
+                 - weights[:, None] * s_excl / jnp.sqrt(c_excl_safe)[:, None])
+        tails = tails / jnp.sqrt(c_incl)[:, None]
+    tails = jnp.where((pos_in_seg > 0)[:, None], tails, jnp.zeros_like(tails))
+
+    c_tot = jax.ops.segment_sum(w2, seg_id, num_segments=num_segments)
+    s_tot = jax.ops.segment_sum(wa, seg_id, num_segments=num_segments)
+    norms = jnp.sqrt(c_tot)
+    heads = s_tot / jnp.where(norms > 0, norms, 1.0)[:, None]
+    return heads, tails, norms
+
+
+# ---------------------------------------------------------------------------
+# Explicit Givens rotations — the oracle the closed forms must agree with.
+# ---------------------------------------------------------------------------
+
+
+def givens_rotation(m: int, i: int, j: int, s: float, c: float) -> np.ndarray:
+    """``Giv_m(i, j, sinθ, cosθ)`` (Definition 3.1), 0-based indices."""
+    g = np.eye(m)
+    g[i, i] = c
+    g[j, j] = c
+    g[i, j] = -s
+    g[j, i] = s
+    return g
+
+
+def givens_sequence(v: np.ndarray) -> np.ndarray:
+    """The orthogonal ``G = R_m … R_2`` of Lemma 3.5 for weight vector ``v``.
+
+    Applying G to ``[S⊗v | T]`` zeroes all but the first (scaled) copy of S and
+    produces [head; tail] — the oracle used by tests.
+    """
+    v = np.asarray(v, dtype=np.float64)
+    m = v.shape[0]
+    g = np.eye(m)
+    for i in range(1, m):  # paper's i = 2..m (1-based)
+        norm_i = np.linalg.norm(v[: i + 1])
+        norm_im1 = np.linalg.norm(v[:i])
+        r = givens_rotation(m, 0, i, -v[i] / norm_i, norm_im1 / norm_i)
+        g = r @ g
+    return g

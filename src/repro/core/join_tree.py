@@ -1,0 +1,329 @@
+"""Join trees and the FiGaRo execution plan (structural index, built at ingest).
+
+A `JoinTree` fixes the evaluation order of the acyclic natural join (paper §2).
+`build_plan` compiles the database + tree into a `FigaroPlan`: per-node group
+structure (segments by full join key ``X̄_i`` and by the parent-shared key
+``X̄_p``), child lookup maps, and the global column layout. All shapes in the
+plan are static, so the numeric passes (`counts.py`, `figaro.py`) jit cleanly.
+
+Terminology matches the paper: for node ``i``, ``X̄_i`` = all join attributes of
+``S_i``; ``X̄_p`` = join attributes shared with the parent (empty for the root or
+for Cartesian edges); ``X̄_ij`` = attributes shared with child ``j`` (== child's
+``X̄_p``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .relation import Database, Relation
+
+__all__ = ["JoinTree", "NodePlan", "FigaroPlan", "build_plan"]
+
+
+@dataclasses.dataclass
+class JoinTree:
+    """Rooted join tree over relation names: ``parent[name]`` (root maps to None)."""
+
+    db: Database
+    parent: dict[str, str | None]
+
+    def __post_init__(self) -> None:
+        roots = [n for n, p in self.parent.items() if p is None]
+        if len(roots) != 1:
+            raise ValueError(f"join tree needs exactly one root, got {roots}")
+        self.root = roots[0]
+        self.children: dict[str, list[str]] = {n: [] for n in self.parent}
+        for n, p in self.parent.items():
+            if p is not None:
+                self.children[p].append(n)
+        if set(self.parent) != set(self.db.names):
+            raise ValueError("join tree nodes != database relations")
+        self._validate_join_tree_property()
+
+    @staticmethod
+    def from_edges(db: Database, root: str,
+                   edges: Sequence[tuple[str, str]]) -> "JoinTree":
+        """Build a join tree rooted at ``root``; ``edges`` may be given in any
+        orientation (they are re-oriented away from the root), so one edge set
+        can be evaluated under every join-tree choice (Table 2)."""
+        adj: dict[str, list[str]] = {}
+        for a, b in edges:
+            adj.setdefault(a, []).append(b)
+            adj.setdefault(b, []).append(a)
+        parent: dict[str, str | None] = {root: None}
+        stack = [root]
+        while stack:
+            node = stack.pop()
+            for nb in adj.get(node, []):
+                if nb not in parent:
+                    parent[nb] = node
+                    stack.append(nb)
+        if adj and len(parent) != len(adj):
+            raise ValueError(
+                f"edges do not form a tree reaching {set(adj) - set(parent)}")
+        return JoinTree(db, parent)
+
+    def preorder(self) -> list[str]:
+        out: list[str] = []
+
+        def rec(n: str) -> None:
+            out.append(n)
+            for c in self.children[n]:
+                rec(c)
+
+        rec(self.root)
+        return out
+
+    def edges(self) -> list[tuple[str, str]]:
+        return [(p, c) for c, p in self.parent.items() if p is not None]
+
+    def shared_attrs(self, a: str, b: str) -> tuple[str, ...]:
+        ra, rb = self.db[a], self.db[b]
+        return tuple(x for x in ra.key_attrs if x in rb.key_attrs)
+
+    def _validate_join_tree_property(self) -> None:
+        """Each attribute must induce a connected subtree (α-acyclicity)."""
+        attr_nodes: dict[str, list[str]] = {}
+        for rel in self.db:
+            for a in rel.key_attrs:
+                attr_nodes.setdefault(a, []).append(rel.name)
+        for attr, nodes in attr_nodes.items():
+            if len(nodes) <= 1:
+                continue
+            # The nodes containing `attr`, plus tree edges between them, must
+            # form a connected subgraph.
+            node_set = set(nodes)
+            # union-find over tree edges whose both endpoints have the attr
+            parent_uf = {n: n for n in nodes}
+
+            def find(x: str) -> str:
+                while parent_uf[x] != x:
+                    parent_uf[x] = parent_uf[parent_uf[x]]
+                    x = parent_uf[x]
+                return x
+
+            for p, c in self.edges():
+                if p in node_set and c in node_set:
+                    parent_uf[find(p)] = find(c)
+            roots = {find(n) for n in nodes}
+            if len(roots) != 1:
+                raise ValueError(
+                    f"attribute {attr!r} violates the join-tree property "
+                    f"(occurs in disconnected nodes {sorted(nodes)}) — the join "
+                    "is not acyclic for this tree; materialize a tree "
+                    "decomposition first (paper §2)."
+                )
+
+
+def _group_structure(codes: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """For a sorted code array return (elem_to_group, group_start, group_count)."""
+    m = codes.shape[0]
+    if m == 0:
+        z = np.zeros(0, dtype=np.int32)
+        return z, z, z
+    first = np.ones(m, dtype=bool)
+    first[1:] = codes[1:] != codes[:-1]
+    elem_to_group = np.cumsum(first).astype(np.int32) - 1
+    group_start = np.nonzero(first)[0].astype(np.int32)
+    group_count = np.diff(np.append(group_start, m)).astype(np.int32)
+    return elem_to_group, group_start, group_count
+
+
+def _codes(rel: Relation, attrs: Sequence[str], cards: dict[str, int]) -> np.ndarray:
+    """Composite int64 codes over `attrs` using *global* attribute cardinalities,
+    so codes are comparable across relations."""
+    code = np.zeros(rel.num_rows, dtype=np.int64)
+    for a in attrs:
+        code = code * cards[a] + rel.key_col(a)
+    return code
+
+
+@dataclasses.dataclass
+class NodePlan:
+    name: str
+    idx: int
+    parent: int  # -1 for root
+    children: list[int]
+    # Static sizes.
+    m: int  # rows
+    n: int  # data columns
+    K: int  # distinct full join keys X̄_i
+    P: int  # distinct parent-shared keys X̄_p (1 for root / Cartesian edge)
+    # Row-level structure (all [m]).
+    row_to_group: np.ndarray
+    row_seg_start: np.ndarray  # first row index of the row's group
+    pos_in_group: np.ndarray
+    # Group-level structure.
+    group_start: np.ndarray  # [K] first row of group
+    group_count: np.ndarray  # [K]
+    group_to_pgroup: np.ndarray  # [K]
+    group_seg_start: np.ndarray  # [K] first group index of the group's pgroup
+    pos_in_pgroup: np.ndarray  # [K]
+    pgroup_count: np.ndarray  # [P] (# groups per pgroup)
+    # Child lookups: child idx -> [K] index into that child's P-table.
+    child_lookup: dict[int, np.ndarray]
+    # Column layout (global, preorder => subtree columns contiguous).
+    col_start: int
+    subtree_start: int
+    subtree_width: int
+    # The node's sorted numeric data.
+    data: np.ndarray  # [m, n] float
+
+
+@dataclasses.dataclass
+class FigaroPlan:
+    nodes: list[NodePlan]  # indexed by node idx
+    preorder: list[int]
+    root: int
+    num_cols: int  # N = total data columns
+    total_rows: int  # M = sum of m_i
+    r0_rows: int  # rows of the (padded) almost-upper-triangular R0
+    names: list[str]
+
+    def node_by_name(self, name: str) -> NodePlan:
+        return self.nodes[self.names.index(name)]
+
+
+def build_plan(tree: JoinTree, dtype=np.float64) -> FigaroPlan:
+    """Compile (database, join tree) into a FigaroPlan.
+
+    Sorts every relation with the parent-shared attributes major (paper §5
+    assumption), derives segment structure, child lookup tables, and the global
+    preorder column layout.
+    """
+    db = tree.db
+    order = tree.preorder()
+    name_to_idx = {n: i for i, n in enumerate(order)}
+
+    # Global attribute cardinalities (for cross-relation composite codes).
+    cards: dict[str, int] = {}
+    for rel in db:
+        for a in rel.key_attrs:
+            c = int(rel.key_col(a).max()) + 1 if rel.num_rows else 1
+            cards[a] = max(cards.get(a, 1), c)
+
+    # Column layout: preorder, so each subtree occupies a contiguous range.
+    col_start: dict[str, int] = {}
+    acc = 0
+    for nme in order:
+        col_start[nme] = acc
+        acc += db[nme].num_data_cols
+    num_cols = acc
+
+    def subtree_cols(nme: str) -> int:
+        return db[nme].num_data_cols + sum(subtree_cols(c) for c in tree.children[nme])
+
+    nodes: list[NodePlan] = [None] * len(order)  # type: ignore
+
+    # First pass: sort relations and build per-node group structure.
+    sorted_rels: dict[str, Relation] = {}
+    pkey_attrs: dict[str, tuple[str, ...]] = {}
+    for nme in order:
+        par = tree.parent[nme]
+        xp = tree.shared_attrs(nme, par) if par is not None else ()
+        rest = tuple(a for a in db[nme].key_attrs if a not in xp)
+        sorted_rels[nme] = db[nme].sorted_by(tuple(xp) + rest)
+        pkey_attrs[nme] = tuple(xp)
+
+    # Distinct X̄_p tables per node (codes, sorted) — needed for parent lookups.
+    pcode_table: dict[str, np.ndarray] = {}
+    for nme in order:
+        rel = sorted_rels[nme]
+        pcodes = _codes(rel, pkey_attrs[nme], cards)
+        pcode_table[nme] = np.unique(pcodes)  # sorted
+
+    for nme in order:
+        rel = sorted_rels[nme]
+        par = tree.parent[nme]
+        xp = pkey_attrs[nme]
+        # Rows are sorted xp-major; full-key codes must therefore be mixed
+        # xp-major too for sortedness:
+        xp_major = tuple(xp) + tuple(a for a in rel.key_attrs if a not in xp)
+        full_codes = _codes(rel, xp_major, cards)
+        if np.any(np.diff(full_codes) < 0):
+            raise AssertionError(f"{nme}: rows not sorted — ingest bug")
+        row_to_group, group_start, group_count = _group_structure(full_codes)
+        K = group_start.shape[0]
+        pos_in_group = np.arange(rel.num_rows, dtype=np.int32) - group_start[row_to_group]
+        row_seg_start = group_start[row_to_group]
+
+        # pgroup structure over groups.
+        pcodes_rows = _codes(rel, xp, cards)
+        pcodes_groups = pcodes_rows[group_start]
+        group_to_pgroup, pg_start, pg_count = _group_structure(pcodes_groups)
+        P = pg_start.shape[0]
+        group_seg_start = pg_start[group_to_pgroup]
+        pos_in_pgroup = np.arange(K, dtype=np.int32) - group_seg_start
+
+        # Child lookups: project this node's group keys onto X̄_ij and find the
+        # index in the child's distinct X̄_p table. Fully-reduced inputs make
+        # every lookup hit (asserted).
+        child_lookup: dict[int, np.ndarray] = {}
+        for ch in tree.children[nme]:
+            xij = pkey_attrs[ch]
+            proj = _codes(rel, xij, cards)[group_start]
+            table = pcode_table[ch]
+            pos = np.searchsorted(table, proj)
+            pos = np.clip(pos, 0, table.shape[0] - 1)
+            if not np.all(table[pos] == proj):
+                raise ValueError(
+                    f"dangling key {nme}->{ch}: database is not fully reduced; "
+                    "run relation.full_reduce first")
+            child_lookup[name_to_idx[ch]] = pos.astype(np.int32)
+
+        nodes[name_to_idx[nme]] = NodePlan(
+            name=nme,
+            idx=name_to_idx[nme],
+            parent=-1 if par is None else name_to_idx[par],
+            children=[name_to_idx[c] for c in tree.children[nme]],
+            m=rel.num_rows,
+            n=rel.num_data_cols,
+            K=K,
+            P=int(pcode_table[nme].shape[0]),
+            row_to_group=row_to_group,
+            row_seg_start=row_seg_start.astype(np.int32),
+            pos_in_group=pos_in_group,
+            group_start=group_start,
+            group_count=group_count,
+            group_to_pgroup=group_to_pgroup,
+            group_seg_start=group_seg_start.astype(np.int32),
+            pos_in_pgroup=pos_in_pgroup,
+            pgroup_count=pg_count,
+            child_lookup=child_lookup,
+            col_start=col_start[nme],
+            subtree_start=col_start[nme],
+            subtree_width=subtree_cols(nme),
+            data=np.asarray(rel.data, dtype=dtype),
+        )
+
+    # Reverse-lookup sanity: child P-table == child's distinct X̄_p codes, and
+    # the parent must cover all of them (full reduction the other way).
+    for nme in order:
+        for ch in tree.children[nme]:
+            child = nodes[name_to_idx[ch]]
+            lookup = nodes[name_to_idx[nme]].child_lookup[child.idx]
+            covered = np.unique(lookup)
+            if covered.shape[0] != child.P:
+                raise ValueError(
+                    f"dangling keys in {ch} (not matched by {nme}); run full_reduce")
+
+    total_rows = sum(nd.m for nd in nodes)
+    # R0 rows: per node its m tail rows; for non-root nodes K generalized-tail
+    # rows; for the root K data (head) rows.
+    r0_rows = sum(nd.m for nd in nodes)
+    r0_rows += sum(nd.K for nd in nodes if nd.parent >= 0)
+    r0_rows += nodes[name_to_idx[tree.root]].K
+
+    return FigaroPlan(
+        nodes=nodes,
+        preorder=[name_to_idx[n] for n in order],
+        root=name_to_idx[tree.root],
+        num_cols=num_cols,
+        total_rows=total_rows,
+        r0_rows=r0_rows,
+        names=order,
+    )

@@ -1,0 +1,2 @@
+from .pipeline import TokenPipeline  # noqa: F401
+from . import relational  # noqa: F401

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (validated on CPU with interpret=True):
+
+  head_tail/   segmented generalized head/tail — FiGaRo's inner loop
+  panel_qr/    Householder panel factorization — post-processing hot spot
+  linear_scan/ chunked diagonal linear RNN — Mamba/RWKV6 mixer hot spot
+"""

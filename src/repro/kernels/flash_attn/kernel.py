@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: fused blockwise (flash-style) attention forward.
+
+This is the kernel the §Perf blockwise accounting models: one HBM pass over
+Q/K/V with the [Tq, Tk] score matrix never materialized — scores live in a
+VMEM tile, the softmax is the online (running max / running sum) form, and
+the output accumulates in f32.
+
+TPU mapping:
+  grid = (batch*heads, q_blocks, kv_blocks) with the KV dimension innermost,
+  so each (bh, q-block) walks KV blocks sequentially carrying the online-
+  softmax state (m, l, acc) in VMEM scratch. Block shapes are MXU-aligned:
+  the two matmuls per block are [bq, hd]x[hd, bk] and [bq, bk]x[bk, hd] with
+  hd and bk multiples of 128 (lane dim) and bq a multiple of 8 (sublanes).
+  Causality and padding are handled with position tiles and an additive
+  mask; fully-masked KV blocks still run (grid shapes are static) but
+  contribute exp(-inf)=0 — the production scheduler skips them by
+  restricting the kv grid per q-block (the ``causal_skip`` fast path lowers
+  a triangular grid when Tq == Tk).
+
+GQA: Q heads of one KV head are folded into the q-block rows (the caller
+reshapes [B, T, Hkv, G, hd] -> [B*Hkv, T*G? no — [B*Hkv*G] heads with the
+same K/V block index map]), so K/V tiles are fetched once per KV head.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, out_ref,
+                  m_ref, l_ref, acc_ref, *, causal: bool,
+                  window: int | None, scale: float, num_kv_blocks: int):
+    kv_i = pl.program_id(2)  # innermost: sequential online-softmax carry
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)            # [bk, hd]
+    v = v_ref[0].astype(jnp.float32)            # [bk, hd]
+    qp = qpos_ref[0]                            # [bq] int32
+    kp = kpos_ref[0]                            # [bk] int32
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    ok = (kp[None, :] >= 0)
+    if causal:
+        ok &= kp[None, :] <= qp[:, None]
+    if window is not None:
+        ok &= kp[None, :] > qp[:, None] - window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]                         # [bq, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                      # [bq, bk]
+    corr = jnp.exp(m_prev - m_new)              # [bq, 1]
+    l_new = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_new = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(kv_i == num_kv_blocks - 1)
+    def _finish():
+        out_ref[0] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(out_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, q_pos, k_pos, *, causal: bool,
+                           window: int | None, block_q: int, block_kv: int,
+                           interpret: bool):
+    """q: [H, Tq, hd], k/v: [H, Tk, hd], q_pos [H, Tq], k_pos [H, Tk].
+
+    Returns [H, Tq, hd]. H folds batch*kv_heads*group (caller's layout).
+    """
+    h, tq, hd = q.shape
+    tk = k.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    nq = -(-tq // block_q)
+    nk = -(-tk // block_kv)
+    pad_q = nq * block_q - tq
+    pad_k = nk * block_kv - tk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=0)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad_k)), constant_values=-1)
+
+    grid = (h, nq, nk)
+    kern = functools.partial(_flash_kernel, causal=causal, window=window,
+                             scale=scale, num_kv_blocks=nk)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh, qi)),
+            pl.BlockSpec((1, block_kv), lambda bh, qi, ki: (bh, ki)),
+            pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, nq * block_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running sum l
+            pltpu.VMEM((block_q, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q_pos, k_pos, q, k, v)
+    return out[:, :tq]

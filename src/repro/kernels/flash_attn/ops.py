@@ -1,0 +1,50 @@
+"""Jitted public wrapper for the fused attention kernel.
+
+Folds GQA batch/head layout ([B, T, Hkv, G, hd] -> [B*Hkv*G] kernel heads,
+with K/V broadcast per group) and dispatches interpret mode off-TPU —
+the validation mode of this container.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import (DEFAULT_BLOCK_KV, DEFAULT_BLOCK_Q,
+                     flash_attention_kernel)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, q_pos, k_pos, *, causal: bool = True,
+                    window: int | None = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_kv: int = DEFAULT_BLOCK_KV):
+    """Fused GQA attention.
+
+    Args:
+      q: [B, Tq, Hq, hd]; k/v: [B, Tk, Hkv, hd] with Hq % Hkv == 0.
+      q_pos: [Tq] int32 absolute positions; k_pos: [Tk] (−1 = padded slot).
+    Returns [B, Tq, Hq, hd].
+    """
+    b, tq, hq, hd = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    # [B, T, Hkv, G, hd] -> [B*Hkv*G, T, hd]; kernel heads with shared KV are
+    # adjacent, so K/V tiles repeat per group (broadcast at dispatch).
+    qh = (q.reshape(b, tq, hkv, g, hd).transpose(0, 2, 3, 1, 4)
+          .reshape(b * hkv * g, tq, hd))
+    kh = jnp.repeat(k.transpose(0, 2, 1, 3).reshape(b * hkv, tk, hd), g,
+                    axis=0)
+    vh = jnp.repeat(v.transpose(0, 2, 1, 3).reshape(b * hkv, tk, hd), g,
+                    axis=0)
+    qp = jnp.broadcast_to(q_pos[None], (b * hkv * g, tq)).astype(jnp.int32)
+    kp = jnp.broadcast_to(k_pos[None], (b * hkv * g, tk)).astype(jnp.int32)
+    out = flash_attention_kernel(qh, kh, vh, qp, kp, causal=causal,
+                                 window=window, block_q=block_q,
+                                 block_kv=block_kv,
+                                 interpret=not _on_tpu())
+    return (out.reshape(b, hkv, g, tq, hd).transpose(0, 3, 1, 2, 4)
+            .reshape(b, tq, hq, hd))

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash-attention kernel (materialized softmax)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, q_pos, k_pos, *, causal: bool,
+                        window: int | None):
+    """q: [H, Tq, hd], k/v: [H, Tk, hd]; positions [H, Tq] / [H, Tk]."""
+    hd = q.shape[-1]
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)
+    ok = k_pos[:, None, :] >= 0
+    if causal:
+        ok &= k_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        ok &= k_pos[:, None, :] > q_pos[:, :, None] - window
+    s = jnp.where(ok, s, -jnp.inf)
+    w = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("hqk,hkd->hqd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,40 @@
+"""Jitted public wrapper for the segmented-tail kernel.
+
+On TPU the Pallas kernel runs compiled; everywhere else it runs in
+``interpret=True`` mode (the kernel body executed by XLA on CPU), which is the
+validation mode this container uses.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import segmented_tail_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def segmented_tail(data, wa, first, coef_a, coef_b, *,
+                   block_rows: int = 256, block_cols: int = 256):
+    """Segmented generalized-tail transform (see kernel.py).
+
+    Args:
+      data, wa: [m, n]
+      first: [m] or [m,1] segment-start indicator
+      coef_a, coef_b: [m] or [m,1]
+    Returns [m, n] tails (rows at segment starts are garbage — caller masks).
+    """
+    if first.ndim == 1:
+        first = first[:, None]
+    if coef_a.ndim == 1:
+        coef_a = coef_a[:, None]
+    if coef_b.ndim == 1:
+        coef_b = coef_b[:, None]
+    return segmented_tail_kernel(
+        data, wa, first.astype(data.dtype), coef_a.astype(data.dtype),
+        coef_b.astype(data.dtype),
+        block_rows=block_rows, block_cols=block_cols,
+        interpret=not _on_tpu())

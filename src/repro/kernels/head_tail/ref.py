@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the segmented-tail kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.heads_tails import segmented_cumsum
+
+
+def segmented_tail_ref(data, wa, first, coef_a, coef_b):
+    """out[r] = coef_a[r]·data[r] + coef_b[r]·(segmented exclusive Σ wa)[r]."""
+    excl = segmented_cumsum(wa, first[:, 0] > 0) - wa
+    return coef_a * data + coef_b * excl

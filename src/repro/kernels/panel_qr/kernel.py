@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: Householder panel factorization (post-processing hot spot).
+
+The paper finds post-processing (R₀ → R) dominates FiGaRo's runtime for wide
+matrices (§8 Exp 1). Blocked Householder QR splits into (a) a *panel*
+factorization — sequential over columns, latency-bound — and (b) a trailing
+compact-WY update — pure matmuls that the MXU eats. This kernel does (a)
+entirely in VMEM: one [m × nb] panel resident on-chip, nb Householder steps
+without touching HBM, emitting unit-diagonal reflectors V, betas, and the
+triangularized panel.
+
+Column selection uses iota masks instead of dynamic lane slicing (TPU lane
+dim is not cheaply dynamically indexable); each step is two VPU reductions +
+one rank-1 update.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _panel_kernel(a_ref, v_ref, beta_ref, r_ref, *, m: int, nb: int):
+    a = a_ref[...].astype(jnp.float32)  # [m, nb]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (m, 1), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, nb), 1)
+
+    def step(k, carry):
+        a, vs, betas = carry
+        colmask = (cols == k).astype(jnp.float32)        # [1, nb]
+        col = jnp.sum(a * colmask, axis=1, keepdims=True)  # [m, 1]
+        below = (rows >= k).astype(jnp.float32)
+        x = col * below
+        sigma2 = jnp.sum(x * x)
+        sigma = jnp.sqrt(sigma2)
+        at_k = (rows == k).astype(jnp.float32)
+        xk = jnp.sum(x * at_k)
+        sgn = jnp.where(xk >= 0, 1.0, -1.0)
+        alpha = -sgn * sigma
+        v = x - alpha * at_k
+        vk = jnp.sum(v * at_k)
+        safe = jnp.abs(vk) > 0.0
+        v = jnp.where(safe, v / jnp.where(safe, vk, 1.0), v)  # unit diagonal
+        vv = jnp.sum(v * v)
+        beta = jnp.where(vv > 0, 2.0 / jnp.where(vv > 0, vv, 1.0), 0.0)
+        w = jnp.sum(v * a, axis=0, keepdims=True)            # [1, nb] = vᵀA
+        a = a - beta * v * w                                  # rank-1 update
+        vs = vs + v * colmask                                 # store column k
+        betas = betas + beta * colmask
+        return a, vs, betas
+
+    vs0 = jnp.zeros((m, nb), jnp.float32)
+    betas0 = jnp.zeros((1, nb), jnp.float32)
+    a, vs, betas = jax.lax.fori_loop(0, min(m, nb), step, (a, vs0, betas0))
+
+    v_ref[...] = vs.astype(v_ref.dtype)
+    beta_ref[...] = betas.astype(beta_ref.dtype)
+    # Zero strictly-below-diagonal residue (numerical dust from the updates).
+    upper = (rows <= cols).astype(jnp.float32)
+    r_ref[...] = (a * upper).astype(r_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def panel_qr_kernel(a: jnp.ndarray, *, interpret: bool = False):
+    """Factor one panel [m, nb] (entirely VMEM-resident).
+
+    Returns (V [m, nb] unit-diagonal reflectors, beta [nb], R_panel [m, nb]).
+    VMEM budget: 4 copies of the panel in f32 — keep m·nb ≲ 512·128.
+    """
+    m, nb = a.shape
+    kern = functools.partial(_panel_kernel, m=m, nb=nb)
+    spec = pl.BlockSpec((m, nb), lambda: (0, 0))
+    bspec = pl.BlockSpec((1, nb), lambda: (0, 0))
+    v, beta, r = pl.pallas_call(
+        kern,
+        grid=(),
+        in_specs=[spec],
+        out_specs=[spec, bspec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, nb), a.dtype),
+            jax.ShapeDtypeStruct((1, nb), a.dtype),
+            jax.ShapeDtypeStruct((m, nb), a.dtype),
+        ],
+        interpret=interpret,
+    )(a)
+    return v, beta[0], r

@@ -1,0 +1,16 @@
+"""Jitted public wrapper for the panel-QR kernel (interpret=True off-TPU)."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import panel_qr_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def panel_qr(a):
+    """Householder panel factorization: (V, beta, R_panel) for [m, nb] input."""
+    return panel_qr_kernel(a, interpret=not _on_tpu())

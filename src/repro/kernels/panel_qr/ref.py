@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the panel-QR kernel: `core.postprocess.householder_panel`."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.postprocess import householder_panel
+
+
+def panel_qr_ref(a: jnp.ndarray):
+    """(V unit-diagonal, beta, R_panel) — reference contract for the kernel."""
+    v, beta, r = householder_panel(a)
+    rows = jnp.arange(a.shape[0])[:, None]
+    cols = jnp.arange(a.shape[1])[None, :]
+    return v, beta, jnp.where(rows <= cols, r, 0.0)

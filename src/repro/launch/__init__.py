@@ -1,0 +1,7 @@
+"""Launchers: mesh construction, multi-pod dry-run, fault-tolerant trainer.
+
+NOTE: do not import `dryrun` from library code — importing it sets
+XLA_FLAGS for 512 host devices (by design, as the very first lines).
+"""
+
+from .mesh import make_production_mesh, make_host_mesh  # noqa: F401

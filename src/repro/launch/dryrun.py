@@ -1,0 +1,386 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first init).
+# 512 placeholder host devices exist ONLY in this process — smoke tests and
+# benchmarks see the real single device.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this lowers the real step function (train_step / prefill /
+decode_step) with ShapeDtypeStruct stand-ins carrying full production
+shardings, compiles it for the 16×16 (single-pod, 256 chips) and 2×16×16
+(multi-pod, 512 chips) meshes, prints ``memory_analysis()`` (fits or not) and
+``cost_analysis()`` (FLOPs/bytes), parses collective bytes from the
+partitioned HLO, and writes the roofline record to JSON
+(benchmarks/results/dryrun/). Sharding mismatches, compile-time OOMs and
+unsupported collectives surface here as hard failures.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out benchmarks/results/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, SHAPES, cell_is_runnable, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import build_roofline
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig
+from repro.sharding.rules import data_axes, param_shardings
+from repro.train.serve import cache_specs, make_decode_step, make_prefill
+from repro.train.step import init_state, make_train_step
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _with_shardings(shape_tree, sharding_tree):
+    return jax.tree_util.tree_map(
+        lambda s, sh: _sds(s.shape, s.dtype, sh), shape_tree, sharding_tree)
+
+
+def _batch_specs(cfg: ModelConfig, mesh, batch: int, seq: int):
+    """ShapeDtypeStructs for one model batch (tokens + modality stubs)."""
+    dp = data_axes(mesh)
+    ns = lambda spec: NamedSharding(mesh, spec)
+    text = seq - cfg.patch_positions if cfg.patch_positions else seq
+    out = {"tokens": _sds((batch, text), jnp.int32, ns(P(dp, None)))}
+    if cfg.is_enc_dec:
+        out["frames"] = _sds((batch, cfg.encoder_len, cfg.d_model),
+                             jnp.dtype(cfg.compute_dtype), ns(P(dp, None, None)))
+    if cfg.patch_positions:
+        out["patches"] = _sds((batch, cfg.patch_positions, cfg.d_model),
+                              jnp.dtype(cfg.compute_dtype), ns(P(dp, None, None)))
+    return out
+
+
+#: Post-hillclimb defaults (EXPERIMENTS.md §Perf). ``--baseline`` restores the
+#: pre-optimization behaviour so both sides of every iteration stay
+#: reproducible.
+OPT_DEFAULTS = {
+    "hier_moe": True,       # §Perf A1: per-DP-shard MoE dispatch
+    "seq_parallel": True,   # §Perf Q1: sequence-sharded activations
+    "sharded_logits": True,  # §Perf C1: vocab-sharded logits output
+    "serve_bf16": True,     # §Perf C2: bf16 weights + no ZeRO at serve time
+    "kv_seq_shard": True,   # §Perf C2: KV slots sharded over `model`
+    "train_bf16": False,    # §Perf A3: bf16 params+moments for huge-MoE train
+}
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh, *,
+                force_micro: int | None = None, opts: dict | None = None):
+    """(step_fn, args as sharded ShapeDtypeStructs, model_flops) per cell.
+
+    Pure stand-ins — nothing is allocated; the same pattern a launcher would
+    use to compile ahead-of-time on a coordinator host.
+    """
+    opts = dict(OPT_DEFAULTS, **(opts or {}))
+    spec = SHAPES[shape_name]
+    batch, seq = spec.global_batch, spec.seq_len
+    # Pin activation batch sharding (long_500k's batch=1 shards the KV cache
+    # sequence instead — no batch constraint there).
+    import dataclasses as _dc
+    if batch > 1:
+        dp_size = 1
+        for ax in data_axes(mesh):
+            dp_size *= mesh.shape[ax]
+        msz = mesh.shape.get("model", 1)
+        ep_ok = cfg.moe is not None and cfg.moe.num_experts % msz == 0
+        # Sequence parallelism only for pure-attention stacks: an SSM/RWKV
+        # recurrence runs ALONG the sequence dim — sharding it between blocks
+        # forces GSPMD into per-chunk resharding of the scan carry (observed:
+        # jamba train_4k compile blows past 16 min; attn-only archs compile
+        # in seconds).
+        sp_ok = all(s.mixer == "attn"
+                    for s in cfg.block + cfg.encoder_block)
+        cfg = _dc.replace(
+            cfg, dp_axes=data_axes(mesh),
+            moe_groups=dp_size if (cfg.moe and opts["hier_moe"]) else 1,
+            ep_axes=("model",) if (ep_ok and opts["hier_moe"]) else None,
+            seq_shard_activations=bool(opts["seq_parallel"]) and sp_ok,
+        )
+    cfg = _dc.replace(cfg, shard_logits=bool(opts["sharded_logits"]))
+    if spec.kind in ("prefill", "decode") and opts["serve_bf16"]:
+        # Production serving: bf16 weights; drop ZeRO (per-token weight
+        # gathers are pure overhead at inference) ONLY when the TP-sharded
+        # bf16 weights actually fit — big-MoE archs (arctic 954 GB bf16)
+        # must keep the data-axis weight sharding or they replicate
+        # 60 GB/device. §Perf iteration C2 + its memory-fit refinement.
+        msz = mesh.shape.get("model", 1)
+        tp_resident_gb = 2 * cfg.param_count() / msz / 1e9
+        cfg = _dc.replace(cfg, param_dtype="bfloat16",
+                          fsdp=cfg.fsdp and tp_resident_gb > 6.0)
+    if spec.kind == "train" and opts["train_bf16"]:
+        # §Perf A3: bf16 master weights + bf16 moments — halves the ZeRO-3
+        # all-gather volume and the optimizer-state footprint (the 0.5T-param
+        # arctic config cannot fit a single pod otherwise).
+        cfg = _dc.replace(cfg, param_dtype="bfloat16",
+                          opt_state_dtype="bfloat16")
+    opt_cfg = AdamWConfig(state_dtype=cfg.opt_state_dtype)
+    n_active = cfg.active_param_count()
+
+    params_shape = jax.eval_shape(
+        lambda k: tfm.init_params(k, cfg), jax.random.PRNGKey(0))
+    p_shards = param_shardings(cfg, mesh, params_shape)
+    params_sds = _with_shardings(params_shape, p_shards)
+
+    if spec.kind == "train":
+        # Auto-microbatch: one sample per device per micro-step — bounds live
+        # activations to [1, S, d] per scanned block (grad-accumulated).
+        dp_size = 1
+        for ax in data_axes(mesh):
+            dp_size *= mesh.shape[ax]
+        micro = max(1, batch // dp_size) if seq >= 4096 else 1
+        if force_micro is not None:
+            micro = force_micro
+        step = make_train_step(cfg, opt_cfg, mesh, microbatch=micro)
+        state_shape = jax.eval_shape(
+            lambda k: init_state(k, cfg, opt_cfg), jax.random.PRNGKey(0))
+        opt_shards = {
+            "mu": p_shards, "nu": p_shards,
+            "step": NamedSharding(mesh, P()),
+        }
+        state_sds = jax.tree_util.tree_map(
+            lambda s, sh: _sds(s.shape, s.dtype, sh),
+            {"params": state_shape.params, "opt_state": state_shape.opt_state,
+             "step": state_shape.step},
+            {"params": p_shards, "opt_state": opt_shards,
+             "step": NamedSharding(mesh, P())})
+        from repro.train.step import TrainState
+        state_sds = TrainState(**state_sds)
+        batch_sds = _batch_specs(cfg, mesh, batch, seq)
+        flops = 6.0 * n_active * batch * seq
+        return step, (state_sds, batch_sds), flops
+
+    if spec.kind == "prefill":
+        fn = make_prefill(cfg, max_len=seq)
+        batch_sds = _batch_specs(cfg, mesh, batch, seq)
+        flops = 2.0 * n_active * batch * seq
+        return fn, (params_sds, batch_sds), flops
+
+    # decode: one new token against a seq_len-deep cache.
+    # Tq == 1: decode attention is ONE pass over the (locally sharded) cache —
+    # the blockwise KV loop only exists to bound Tq×block memory in
+    # train/prefill. Keeping the loop here makes GSPMD dynamic-slice a
+    # model-sharded S dim per block (involuntary full rematerialization;
+    # §Perf C3), so decode always attends over the cache in a single block.
+    cfg = _dc.replace(cfg, attn_block_kv=max(seq, cfg.attn_block_kv))
+    fn = make_decode_step(cfg)
+    shard_seq = batch == 1  # context parallelism for long_500k
+    cache_shape = jax.eval_shape(
+        lambda: {"blocks": tfm.init_cache(cfg, batch, seq),
+                 "pos": jnp.zeros((), jnp.int32)})
+    spec_fn = cache_specs(cfg, mesh, shard_seq=shard_seq,
+                          kv_seq_over_model=bool(opts["kv_seq_shard"]))
+    cache_sds = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _sds(leaf.shape, leaf.dtype,
+                                NamedSharding(mesh, spec_fn(path, leaf))),
+        cache_shape)
+    dp = data_axes(mesh)
+    tok_spec = P() if shard_seq else P(dp, None)
+    tokens_sds = _sds((batch, 1), jnp.int32, NamedSharding(mesh, tok_spec))
+    flops = 2.0 * n_active * batch
+    return fn, (params_sds, cache_sds, tokens_sds), flops
+
+
+def _cost_pass(cfg: ModelConfig, shape_name: str, mesh,
+               *, overrides: dict | None = None, opts: dict | None = None):
+    """cost_analysis + collective bytes of the FULL-depth program.
+
+    XLA's cost_analysis counts loop bodies ONCE, so the production artifact
+    (scan over layers, microbatch scan, blockwise-attention scan, chunked-SSM
+    scan) undercounts FLOPs/bytes/collectives.  Rather than compiling a
+    full-depth unrolled artifact (minutes per cell on this 1-core box), we
+    compile TWO small unrolled artifacts — 1 super-block and 2 super-blocks —
+    and extrapolate linearly in depth:
+
+        C(n) = C(1) + (n - 1) * (C(2) - C(1))
+
+    which is exact for homogeneous stacks (every super-block is identical by
+    construction; embed/lm_head/optimizer-fixed costs live in C(1)'s
+    intercept). Enc-dec stacks (whisper) scale encoder_blocks together with
+    n_blocks — valid because encoder_blocks == n_blocks for the assigned arch.
+    """
+    import dataclasses as dc
+
+    seq = SHAPES[shape_name].seq_len
+    assert cfg.encoder_blocks in (0, cfg.n_blocks), \
+        "depth extrapolation assumes encoder_blocks == n_blocks"
+    ov = overrides or {}
+
+    def artifact(k: int):
+        ccfg = dc.replace(
+            cfg, n_blocks=k,
+            encoder_blocks=k if cfg.is_enc_dec else 0,
+            scan_layers=False,
+            attn_block_kv=ov.get("attn_block_kv",
+                                 max(seq, cfg.attn_block_kv)),
+            ssm_chunk=ov.get("ssm_chunk", seq),
+            **{k2: v for k2, v in ov.items()
+               if k2 not in ("attn_block_kv", "ssm_chunk")})
+        cfn, cargs, _ = input_specs(ccfg, shape_name, mesh, force_micro=1,
+                                    opts=opts)
+        with mesh:
+            comp = jax.jit(cfn).lower(*cargs).compile()
+        cost = comp.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        from repro.launch.roofline import collective_bytes
+        return dict(cost), collective_bytes(comp.as_text())
+
+    c1, coll1 = artifact(1)
+    c2, coll2 = artifact(2)
+    n = cfg.n_blocks
+
+    def extrap(a, b):
+        return {k: max(0.0, float(a.get(k, 0.0))
+                       + (n - 1) * (float(b.get(k, 0.0)) - float(a.get(k, 0.0))))
+                for k in set(a) | set(b)
+                if isinstance(a.get(k, b.get(k)), (int, float))}
+
+    return extrap(c1, c2), {k: int(v) for k, v in extrap(coll1, coll2).items()}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             *, smoke: bool = False, verbose: bool = True,
+             with_cost: bool | None = None, opts: dict | None = None,
+             cost_overrides: dict | None = None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    cfg = get_config(arch, smoke=smoke)
+    runnable, why = cell_is_runnable(cfg, SHAPES[shape_name])
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "status": "skipped", "reason": why}
+    if not runnable:
+        if verbose:
+            print(f"[skip] {arch} × {shape_name} × {mesh_name}: {why}")
+        return rec
+    if with_cost is None:
+        # Roofline table is single-pod; multi-pod proves the `pod` axis shards.
+        with_cost = not multi_pod
+    t0 = time.time()
+    try:
+        fn, args, model_flops = input_specs(cfg, shape_name, mesh, opts=opts)
+        # Donate the state (train) / cache (decode): params+opt or KV buffers
+        # alias in->out instead of doubling the footprint.
+        donate = (0,) if SHAPES[shape_name].kind == "train" else \
+            ((1,) if SHAPES[shape_name].kind == "decode" else ())
+        with mesh:
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+
+        cost, coll = ({}, {})
+        if with_cost:
+            cost, coll = _cost_pass(cfg, shape_name, mesh, opts=opts,
+                                    overrides=cost_overrides)
+        t_cost = time.time() - t0 - t_lower - t_compile
+        peak = 0.0
+        mem_rec = {}
+        if mem is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes"):
+                v = getattr(mem, attr, None)
+                if v is not None:
+                    mem_rec[attr] = int(v)
+            peak = float(mem_rec.get("argument_size_in_bytes", 0)
+                         + mem_rec.get("temp_size_in_bytes", 0)
+                         + mem_rec.get("output_size_in_bytes", 0)
+                         - mem_rec.get("alias_size_in_bytes", 0))
+        rec = {"status": "ok", "arch": arch, "shape": shape_name,
+               "mesh": mesh_name, "memory_analysis": mem_rec,
+               "peak_memory_per_device": peak,
+               "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+               "cost_pass_s": round(t_cost, 1)}
+        if with_cost:
+            rl = build_roofline(arch=arch, shape=shape_name,
+                                mesh_name=mesh_name, chips=chips, cost=cost,
+                                coll=coll, peak_memory=peak,
+                                model_flops=model_flops)
+            rec.update(rl.to_json())
+        if verbose:
+            if with_cost:
+                print(f"[ok]   {arch} × {shape_name} × {mesh_name}: "
+                      f"mem/dev={peak/1e9:.2f}GB "
+                      f"flops/dev={rl.flops_per_device:.3e} "
+                      f"coll/dev={rl.coll_bytes_per_device:.3e}B "
+                      f"dominant={rl.dominant} "
+                      f"(lower {t_lower:.0f}s compile {t_compile:.0f}s "
+                      f"cost {t_cost:.0f}s)")
+            else:
+                print(f"[ok]   {arch} × {shape_name} × {mesh_name}: "
+                      f"mem/dev={peak/1e9:.2f}GB compile-only "
+                      f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+            print(f"       memory_analysis: {mem_rec}")
+    except Exception as e:  # noqa: BLE001 — record and continue in --all mode
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+        if verbose:
+            print(f"[FAIL] {arch} × {shape_name} × {mesh_name}: {e}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn_out = os.path.join(
+            out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+        with open(fn_out, "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs (CI sanity, not the deliverable)")
+    ap.add_argument("--baseline", action="store_true",
+                    help="pre-hillclimb behaviour: global MoE sort, no "
+                         "sequence parallelism, replicated logits "
+                         "(EXPERIMENTS.md §Perf baselines)")
+    ap.add_argument("--attn-accounting", choices=["dense", "blockwise"],
+                    default="dense",
+                    help="cost-pass attention model: 'dense' materializes "
+                         "[B,H,S,S] scores (XLA default without a fused "
+                         "kernel); 'blockwise' accounts the fused "
+                         "flash-style kernel (kernels/flash_attn)")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    args = ap.parse_args()
+    opts = ({k: False for k in OPT_DEFAULTS} if args.baseline else None)
+    cost_overrides = None
+    if args.attn_accounting == "blockwise":
+        cost_overrides = {"attn_block_kv": 1024, "attn_unroll_blocks": True}
+
+    archs = ARCH_NAMES if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, args.out, smoke=args.smoke,
+                               opts=opts, cost_overrides=cost_overrides)
+                n_fail += rec["status"] == "error"
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Roofline terms from a compiled (dry-run) artifact — no hardware required.
+
+TPU v5e constants (per chip): 197 bf16 TFLOP/s, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+``compiled.cost_analysis()`` reports FLOPs/bytes of the *partitioned*
+per-device program, so the three terms come out per-device directly:
+
+    compute_s    = flops / PEAK_FLOPS
+    memory_s     = bytes_accessed / HBM_BW
+    collective_s = collective_bytes / ICI_BW
+
+collective_bytes is not in cost_analysis — we parse the post-SPMD HLO and sum
+*operand* sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (ring-hop multipliers are intentionally not modeled;
+the term is a lower bound and says which cells are collective-bound).
+
+MODEL_FLOPS uses 6·N·D (dense) / 6·N_active·D (MoE) per trained token and
+2·N·D per generated/prefilled token; the ratio MODEL_FLOPS / (flops·chips)
+exposes remat/dispatch/padding waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum operand bytes per collective kind from post-SPMD HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # e.g.:  %all-reduce.5 = f32[128,512] all-reduce(f32[128,512] %x), ...
+        m = re.search(r"=\s+[^\s]+\s+(" + "|".join(_COLLECTIVES) +
+                      r")(?:-start|-done)?\(", stripped)
+        if not m:
+            continue
+        kind = m.group(1)
+        args = stripped[m.end():]
+        depth = 1
+        end = 0
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str = args[:end]
+        total = sum(_shape_bytes(d, s) for d, s in
+                    _SHAPE_RE.findall(operand_str))
+        if total == 0:
+            # operands may be given as bare %refs; fall back to result shape
+            m2 = _SHAPE_RE.search(stripped.split("=", 1)[1])
+            if m2:
+                total = _shape_bytes(m2.group(1), m2.group(2))
+        out[kind] += total
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: dict[str, int]
+    peak_memory_per_device: float
+    model_flops: float  # 6·N_active·D (train) / 2·N_active·tokens (serve)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step-time estimate: max of the three overlapping terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        t = self.step_s
+        return (self.model_flops / (self.chips * PEAK_FLOPS) / t) if t else 0.0
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(dominant=self.dominant, step_s=self.step_s,
+                 useful_flops_fraction=self.useful_flops_fraction,
+                 mfu=self.mfu)
+        return d
+
+
+def build_roofline(*, arch: str, shape: str, mesh_name: str, chips: int,
+                   cost: dict, peak_memory: float, model_flops: float,
+                   hlo_text: str | None = None,
+                   coll: dict[str, int] | None = None) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    if coll is None:
+        coll = collective_bytes(hlo_text or "")
+    coll_total = float(sum(coll.values()))
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=byts,
+        coll_bytes_per_device=coll_total, coll_breakdown=coll,
+        peak_memory_per_device=peak_memory, model_flops=model_flops,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=coll_total / ICI_BW,
+    )

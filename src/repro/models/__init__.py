@@ -1,0 +1,2 @@
+from .config import LayerSpec, MambaConfig, ModelConfig, MoEConfig, RWKVConfig  # noqa: F401
+from . import layers, moe, ssm, transformer  # noqa: F401

@@ -1,0 +1,326 @@
+"""Shared neural layers: norms, RoPE, GQA attention (blockwise + decode), MLP.
+
+Everything is functional: ``init_*`` builds param pytrees, ``apply``-style
+functions consume them. Sharding is by constraint propagation from the param
+PartitionSpecs (sharding/rules.py); activations get explicit constraints only
+at block boundaries (train/step.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Params = dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, d: int | None = None) -> Params:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), _dtype(cfg))}
+    if cfg.norm == "layer":
+        p["bias"] = jnp.zeros((d,), _dtype(cfg))
+    return p
+
+
+def apply_norm(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layer":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_vec(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + 1e-6) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., T, H, hd]; positions: broadcastable to [..., T]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., T, hd/2]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional qk-norm / sliding window / cross-attention)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, nq, hd), dt),
+        "wk": dense_init(ks[1], (d, nkv, hd), dt),
+        "wv": dense_init(ks[2], (d, nkv, hd), dt),
+        "wo": dense_init(ks[3], (nq, hd, d), dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+_PAD_POS = jnp.iinfo(jnp.int32).max
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int | None, dtype):
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    ok = (kp != _PAD_POS) & (kp >= 0)  # padded / unwritten cache slots
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    return jnp.where(ok, 0.0, jnp.finfo(dtype).min).astype(dtype)
+
+
+def _sdpa(q, k, v, bias):
+    """q [B,Tq,Hq,hd], k/v [B,Tk,Hkv,hd] (GQA broadcast), bias [Tq,Tk]."""
+    b, tq, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, tq, hkv, g, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(hd).astype(jnp.float32)
+    logits = logits + bias.astype(jnp.float32)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(b, tq, hq, hd)
+
+
+def _sdpa_blockwise(q, k, v, q_pos, k_pos, causal, window, block_kv: int,
+                    unroll: bool = False):
+    """Online-softmax over KV blocks; activation memory O(Tq·block_kv)."""
+    b, tq, hq, hd = q.shape
+    tk = k.shape[1]
+    hkv = k.shape[2]
+    g = hq // hkv
+    nb = -(-tk // block_kv)
+    pad = nb * block_kv - tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+    kb = k.reshape(b, nb, block_kv, hkv, hd).swapaxes(0, 1)
+    vb = v.reshape(b, nb, block_kv, hkv, hd).swapaxes(0, 1)
+    pb = k_pos.reshape(nb, block_kv)
+    qg = (q.reshape(b, tq, hkv, g, hd) / jnp.sqrt(hd).astype(q.dtype))
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, pblk = blk
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, kblk).astype(jnp.float32)
+        bias = _mask_bias(q_pos, pblk, causal, window, jnp.float32)
+        logits = logits + bias
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(q.dtype), vblk).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, g, tq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, tq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, tq, hd), jnp.float32)
+    if unroll:  # dry-run cost pass: count every block (see ModelConfig)
+        carry = (m0, l0, a0)
+        for i in range(nb):
+            carry, _ = step(carry, (kb[i], vb[i], pb[i]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.astype(q.dtype).transpose(0, 3, 1, 2, 4).reshape(b, tq, hq, hd)
+    return out
+
+
+def _attend(q, k, v, q_pos, k_pos, causal, window, block_kv,
+            unroll: bool = False):
+    """Dispatch direct vs. blockwise (online-softmax) attention."""
+    if k.shape[1] > block_kv:
+        return _sdpa_blockwise(q, k, v, q_pos, k_pos, causal, window,
+                               block_kv, unroll)
+    bias = _mask_bias(q_pos, k_pos, causal, window, jnp.float32)
+    return _sdpa(q, k, v, bias)
+
+
+def attention(
+    p: Params,
+    x: jnp.ndarray,  # [B, T, d]
+    cfg: ModelConfig,
+    *,
+    positions: jnp.ndarray | None = None,  # [T] absolute positions
+    causal: bool = True,
+    cross: bool = False,
+    kv_x: jnp.ndarray | None = None,  # cross-attention source [B, Tk, d]
+    cache: Params | None = None,
+    cache_pos: jnp.ndarray | None = None,  # scalar write position
+) -> tuple[jnp.ndarray, Params | None]:
+    """GQA attention. Modes:
+
+      train:    cache=None              -> attend over x (blockwise if long)
+      prefill:  cache given, T > 1      -> attend over x AND populate cache
+      decode:   cache given, T == 1     -> write slot, attend over cache
+      cross:    cross=True              -> attend over kv_x or prefilled cache
+
+    Self-attention caches are ring buffers when ``cfg.swa_window`` is set
+    (slots == window), else linear buffers of max_len slots.
+    """
+    b, t, d = x.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if positions is None:
+        positions = jnp.arange(t)
+    q = jnp.einsum("btd,dhk->bthk", x.astype(cdt), p["wq"].astype(cdt))
+    if cfg.qk_norm:
+        q = rms_norm_vec(q, p["q_norm"])
+
+    if cross:
+        if cache is not None and "k" in cache:
+            k, v = cache["k"].astype(cdt), cache["v"].astype(cdt)
+        else:
+            src = kv_x.astype(cdt)
+            k = jnp.einsum("btd,dhk->bthk", src, p["wk"].astype(cdt))
+            v = jnp.einsum("btd,dhk->bthk", src, p["wv"].astype(cdt))
+            if cfg.qk_norm:
+                k = rms_norm_vec(k, p["k_norm"])
+        k_pos = jnp.arange(k.shape[1])
+        out = _attend(q, k, v, positions, k_pos, False, None,
+                      cfg.attn_block_kv, cfg.attn_unroll_blocks)
+        y = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(cdt))
+        return y.astype(x.dtype), cache
+
+    k = jnp.einsum("btd,dhk->bthk", x.astype(cdt), p["wk"].astype(cdt))
+    v = jnp.einsum("btd,dhk->bthk", x.astype(cdt), p["wv"].astype(cdt))
+    if cfg.qk_norm:
+        k = rms_norm_vec(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    window = cfg.swa_window
+
+    if cache is None:  # train
+        if cfg.use_flash_kernel:
+            from repro.kernels.flash_attn import flash_attention
+            out = flash_attention(q, k, v, positions.astype(jnp.int32),
+                                  positions.astype(jnp.int32),
+                                  causal=causal, window=window)
+        else:
+            out = _attend(q, k, v, positions, positions, causal, window,
+                          cfg.attn_block_kv, cfg.attn_unroll_blocks)
+        y = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(cdt))
+        return y.astype(x.dtype), None
+
+    slots = cache["k"].shape[1]
+    kd = cache["k"].dtype
+    if t == 1:  # decode step
+        slot = (cache_pos % slots) if window is not None else cache_pos
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(kd),
+                                                 slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(kd),
+                                                 slot, axis=1)
+        cp = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], positions.astype(cache["pos"].dtype), slot, axis=0)
+        new_cache = {"k": ck, "v": cv, "pos": cp}
+        out = _attend(q, ck.astype(cdt), cv.astype(cdt), positions, cp,
+                      True, window, cfg.attn_block_kv,
+                      cfg.attn_unroll_blocks)
+    else:  # prefill: attend over the prompt itself, then fill the cache
+        out = _attend(q, k, v, positions, positions, causal, window,
+                      cfg.attn_block_kv, cfg.attn_unroll_blocks)
+        if t <= slots:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(kd), 0, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(kd), 0, axis=1)
+            cp = cache["pos"].at[:t].set(positions.astype(cache["pos"].dtype))
+        else:  # ring buffer (SWA): keep the last `slots`, ring-aligned
+            shift = t % slots
+            ck = jnp.roll(k[:, -slots:].astype(kd), shift, axis=1)
+            cv = jnp.roll(v[:, -slots:].astype(kd), shift, axis=1)
+            cp = jnp.roll(positions[-slots:].astype(cache["pos"].dtype),
+                          shift, axis=0)
+        new_cache = {"k": ck, "v": cv, "pos": cp}
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(cdt))
+    return y.astype(x.dtype), new_cache
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
+                    dtype) -> Params:
+    slots = min(max_len, cfg.swa_window) if cfg.swa_window else max_len
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, slots, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, slots, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.full((slots,), -1, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Dense MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig) -> Params:
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, ff), dt),
+        "w_up": dense_init(ks[1], (d, ff), dt),
+        "w_down": dense_init(ks[2], (ff, d), dt),
+    }
+
+
+def apply_mlp(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    g = jnp.einsum("btd,df->btf", xc, p["w_gate"].astype(cdt))
+    u = jnp.einsum("btd,df->btf", xc, p["w_up"].astype(cdt))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("btf,fd->btd", h, p["w_down"].astype(cdt)).astype(x.dtype)

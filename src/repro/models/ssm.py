@@ -1,0 +1,284 @@
+"""State-space / linear-RNN mixers: Mamba (jamba) and RWKV-6 (Finch).
+
+Both are instances of a diagonal linear recurrence ``h_t = a_t ⊙ h_{t-1} + u_t``.
+Materializing [T, state] is hopeless at 4k–500k tokens, so training/prefill use
+a *chunked* two-level scan (DESIGN.md §7): an outer `lax.scan` over chunks
+carries the state; inside a chunk the recurrence closes with an associative
+scan over ≤`chunk` steps, materializing only [B, chunk, state]. The chunk body
+is `jax.checkpoint`-ed, so backward recomputes per chunk (remat). Decode is the
+O(1)-state single-step update — the reason these archs run `long_500k`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .config import MambaConfig, ModelConfig, RWKVConfig
+from .layers import Params, dense_init
+
+DEFAULT_CHUNK = 64
+
+
+def chunked_recurrence(inputs, init_state, body: Callable, chunk: int):
+    """Outer scan over chunks of the time axis (axis=1 of every input leaf).
+
+    ``body(h0, chunk_inputs) -> (h_out, chunk_outputs)``; the body is
+    checkpointed. Returns (outputs concatenated over chunks, final state).
+    """
+    t = jax.tree_util.tree_leaves(inputs)[0].shape[1]
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        inputs = jax.tree_util.tree_map(
+            lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2)),
+            inputs)
+    nc = (t + pad) // chunk
+    stacked = jax.tree_util.tree_map(
+        lambda x: x.reshape((x.shape[0], nc, chunk) + x.shape[2:])
+        .swapaxes(0, 1), inputs)
+
+    wrapped = jax.checkpoint(lambda h, xs: body(h, xs))
+    final, outs = jax.lax.scan(wrapped, init_state, stacked)
+    outs = jax.tree_util.tree_map(
+        lambda y: y.swapaxes(0, 1).reshape((y.shape[1], nc * chunk) + y.shape[3:]),
+        outs)
+    if pad:
+        outs = jax.tree_util.tree_map(lambda y: y[:, :t], outs)
+    return outs, final
+
+
+def _assoc_inclusive(decay, u):
+    """Inclusive states of h_t = decay_t ⊙ h_{t-1} + u_t along axis=1 (h_0=0)."""
+
+    def combine(a, b):
+        return b[0] * a[0], b[0] * a[1] + b[1]
+
+    dd, uu = jax.lax.associative_scan(combine, (decay, u), axis=1)
+    return dd, uu  # hs = uu + dd * h0
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM, mamba-1 recurrence as in jamba)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    mc = cfg.mamba or MambaConfig()
+    d = cfg.d_model
+    di = mc.expand * d
+    dtr = mc.dt_rank or d // 16
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dt),
+        "conv_w": dense_init(ks[1], (mc.d_conv, di), dt, scale=0.2),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * mc.d_state), dt),
+        "dt_proj": dense_init(ks[3], (dtr, di), dt),
+        "dt_bias": jnp.full((di,), -4.6, dt),  # softplus^-1(~0.01)
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, mc.d_state + 1, dtype=dt),
+                                  (di, 1))),
+        "d_skip": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[4], (di, d), dt),
+    }
+
+
+def _mamba_inner(p, x, z, conv_state, h0, cfg: ModelConfig):
+    """Shared train/decode core given post-projection x [B,T,di]."""
+    mc = cfg.mamba or MambaConfig()
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, t, di = x.shape
+    ds = mc.d_state
+    dtr = mc.dt_rank or cfg.d_model // 16
+
+    # Causal depthwise conv over time (state = last d_conv-1 inputs).
+    xin = jnp.concatenate([conv_state.astype(cdt), x], axis=1)
+    new_conv_state = xin[:, -(mc.d_conv - 1):]
+    conv = sum(xin[:, i:i + t] * p["conv_w"][i].astype(cdt)
+               for i in range(mc.d_conv))
+    x = jax.nn.silu(conv + p["conv_b"].astype(cdt))
+
+    dbc = jnp.einsum("btd,de->bte", x, p["x_proj"].astype(cdt))
+    dt_r, bmat, cmat = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("btr,rd->btd", dt_r, p["dt_proj"].astype(cdt))
+        + p["dt_bias"].astype(cdt)).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # [di, ds]
+
+    def body(h0, xs):
+        delta_c, b_c, x_c = xs  # [B,L,di], [B,L,ds], [B,L,di]
+        decay = jnp.exp(delta_c[..., None] * a)              # [B,L,di,ds]
+        u = (delta_c * x_c.astype(jnp.float32))[..., None] * \
+            b_c.astype(jnp.float32)[:, :, None, :]           # [B,L,di,ds]
+        dd, uu = _assoc_inclusive(decay, u)
+        hs = uu + dd * h0[:, None]
+        return hs[:, -1], hs
+
+    hs, h_last = chunked_recurrence((delta, bmat, x), h0.astype(jnp.float32),
+                                    body, cfg.ssm_chunk)
+    y = jnp.einsum("btds,bts->btd", hs.astype(cdt), cmat)
+    y = y + x * p["d_skip"].astype(cdt)
+    y = y * jax.nn.silu(z)
+    return y, new_conv_state, h_last
+
+
+def apply_mamba(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                cache: Params | None = None):
+    """x [B, T, d] -> (y [B, T, d], new_cache)."""
+    mc = cfg.mamba or MambaConfig()
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, t, d = x.shape
+    di = mc.expand * d
+    xz = jnp.einsum("btd,de->bte", x.astype(cdt), p["in_proj"].astype(cdt))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    if cache is None:
+        conv_state = jnp.zeros((b, mc.d_conv - 1, di), cdt)
+        h0 = jnp.zeros((b, di, mc.d_state), jnp.float32)
+    else:
+        conv_state, h0 = cache["conv"], cache["ssm"]
+    y, conv_state, h_last = _mamba_inner(p, xi, z, conv_state, h0, cfg)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(cdt))
+    new_cache = {"conv": conv_state.astype(cdt), "ssm": h_last}
+    return out.astype(x.dtype), new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int) -> Params:
+    mc = cfg.mamba or MambaConfig()
+    di = mc.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, mc.d_conv - 1, di), jnp.dtype(cfg.compute_dtype)),
+        "ssm": jnp.zeros((batch, di, mc.d_state), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch): data-dependent decay linear attention + channel mix
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv(key, cfg: ModelConfig) -> Params:
+    rc = cfg.rwkv or RWKVConfig()
+    d = cfg.d_model
+    h = d // rc.head_size
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 12)
+    return {
+        "mu": dense_init(ks[0], (5, d), dt, scale=0.2),      # r,k,v,w,g shifts
+        "mix_w1": dense_init(ks[1], (d, 5 * rc.lora_mix), dt),
+        "mix_w2": dense_init(ks[2], (5, rc.lora_mix, d), dt, scale=0.1),
+        "wr": dense_init(ks[3], (d, d), dt),
+        "wk": dense_init(ks[4], (d, d), dt),
+        "wv": dense_init(ks[5], (d, d), dt),
+        "wg": dense_init(ks[6], (d, d), dt),
+        "wo": dense_init(ks[7], (d, d), dt),
+        "w0": jnp.full((d,), -2.0, dt),
+        "decay_w1": dense_init(ks[8], (d, rc.lora_decay), dt),
+        "decay_w2": dense_init(ks[9], (rc.lora_decay, d), dt, scale=0.1),
+        "bonus": dense_init(ks[10], (h, rc.head_size), dt, scale=0.5),
+        "ln_x": jnp.ones((d,), dt),
+    }
+
+
+def apply_rwkv(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+               cache: Params | None = None):
+    """RWKV-6 time-mix. x [B,T,d] -> (y, new_cache)."""
+    rc = cfg.rwkv or RWKVConfig()
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, t, d = x.shape
+    hd = rc.head_size
+    h = d // hd
+    xc = x.astype(cdt)
+
+    if cache is None:
+        x_prev_last = jnp.zeros((b, 1, d), cdt)
+        s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    else:
+        x_prev_last, s0 = cache["shift"].astype(cdt), cache["state"]
+    x_prev = jnp.concatenate([x_prev_last, xc[:, :-1]], axis=1)
+    dx = x_prev - xc
+
+    # Data-dependent token-shift (ddlerp): per-channel r,k,v,w,g mixes.
+    lora = jnp.tanh(jnp.einsum("btd,de->bte", xc, p["mix_w1"].astype(cdt)))
+    lora = lora.reshape(b, t, 5, rc.lora_mix)
+    mix = p["mu"].astype(cdt)[None, None] + jnp.einsum(
+        "btcl,cld->btcd", lora, p["mix_w2"].astype(cdt))
+    xr, xk, xv, xw, xg = [xc + dx * mix[:, :, i] for i in range(5)]
+
+    r = jnp.einsum("btd,de->bte", xr, p["wr"].astype(cdt)).reshape(b, t, h, hd)
+    k = jnp.einsum("btd,de->bte", xk, p["wk"].astype(cdt)).reshape(b, t, h, hd)
+    v = jnp.einsum("btd,de->bte", xv, p["wv"].astype(cdt)).reshape(b, t, h, hd)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, p["wg"].astype(cdt)))
+    # Data-dependent decay w_t = exp(-exp(w0 + lora_w(x_w))) in (0, 1).
+    wlog = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "btd,de,ef->btf", xw.astype(jnp.float32),
+        p["decay_w1"].astype(jnp.float32), p["decay_w2"].astype(jnp.float32))
+    decay = jnp.exp(-jnp.exp(wlog)).reshape(b, t, h, hd)
+    u = p["bonus"].astype(jnp.float32)  # [h, hd]
+
+    def body(s0, xs):
+        r_c, k_c, v_c, w_c = xs  # [B,L,h,hd]
+        kf, vf = k_c.astype(jnp.float32), v_c.astype(jnp.float32)
+        kv = kf[..., :, None] * vf[..., None, :]        # [B,L,h,hd,hd]
+        dd, uu = _assoc_inclusive(w_c[..., None], kv)
+        hs = uu + dd * s0[:, None]
+        s_prev = jnp.concatenate([s0[:, None], hs[:, :-1]], axis=1)
+        rf = r_c.astype(jnp.float32)
+        y = jnp.einsum("blhk,blhkv->blhv", rf, s_prev)
+        y += jnp.einsum("blhk,hk,blhk,blhv->blhv", rf, u, kf, vf)
+        return hs[:, -1], y
+
+    y, s_last = chunked_recurrence((r, k, v, decay), s0, body, cfg.ssm_chunk)
+    # Per-head group norm, then gate + output projection.
+    yf = y.reshape(b, t, h, hd)
+    mu_ = yf.mean(-1, keepdims=True)
+    var = ((yf - mu_) ** 2).mean(-1, keepdims=True)
+    yf = (yf - mu_) * jax.lax.rsqrt(var + 1e-5)
+    yf = yf.reshape(b, t, d) * p["ln_x"].astype(jnp.float32)
+    out = jnp.einsum("btd,de->bte", yf.astype(cdt) * g, p["wo"].astype(cdt))
+    new_cache = {"shift": xc[:, -1:], "state": s_last}
+    return out.astype(x.dtype), new_cache
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int) -> Params:
+    rc = cfg.rwkv or RWKVConfig()
+    d = cfg.d_model
+    h = d // rc.head_size
+    return {
+        "shift": jnp.zeros((batch, 1, d), jnp.dtype(cfg.compute_dtype)),
+        "state": jnp.zeros((batch, h, rc.head_size, rc.head_size), jnp.float32),
+    }
+
+
+def init_rwkv_cmix(key, cfg: ModelConfig) -> Params:
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": dense_init(ks[0], (d,), dt, scale=0.2),
+        "mu_r": dense_init(ks[1], (d,), dt, scale=0.2),
+        "wk": dense_init(ks[2], (d, ff), dt),
+        "wv": dense_init(jax.random.fold_in(key, 7), (ff, d), dt),
+        "wr": dense_init(jax.random.fold_in(key, 8), (d, d), dt),
+    }
+
+
+def apply_rwkv_cmix(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                    cache: Params | None = None):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, t, d = x.shape
+    xc = x.astype(cdt)
+    prev = jnp.zeros((b, 1, d), cdt) if cache is None else \
+        cache["shift"].astype(cdt)
+    x_prev = jnp.concatenate([prev, xc[:, :-1]], axis=1)
+    dx = x_prev - xc
+    xk = xc + dx * p["mu_k"].astype(cdt)
+    xr = xc + dx * p["mu_r"].astype(cdt)
+    kk = jnp.einsum("btd,df->btf", xk, p["wk"].astype(cdt))
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("btf,fd->btd", kk, p["wv"].astype(cdt))
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr"].astype(cdt)))
+    return (rr * vv).astype(x.dtype), {"shift": xc[:, -1:]}

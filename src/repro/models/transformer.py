@@ -1,0 +1,378 @@
+"""Model assembly: params init, train forward, prefill, and decode.
+
+The depth dimension is a `lax.scan` over stacked super-block params (HLO size
+independent of layer count — critical for the 512-device dry-run compile).
+Per-super-block structure is static Python (`cfg.block` LayerSpecs), so jamba's
+1-attn:7-mamba interleave and arctic's dense+MoE parallel residual stay
+scan-able. `jax.checkpoint` wraps the block body when ``cfg.remat``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from . import layers, moe as moe_lib, ssm
+from .config import LayerSpec, ModelConfig
+from .layers import Params
+
+
+def _constrain_act(x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Pin activations to batch-over-DP (see ModelConfig.dp_axes).
+
+    With ``cfg.seq_shard_activations`` the sequence dim additionally shards
+    over `model` between blocks (Megatron-style sequence parallelism: GSPMD
+    then lowers the per-layer TP all-reduces to reduce-scatter + all-gather
+    and shards the norm compute; §Perf iteration Q1)."""
+    if cfg.dp_axes is None:
+        return x
+    if (cfg.seq_shard_activations and x.ndim >= 3 and
+            x.shape[1] >= 128 and x.shape[1] % 128 == 0):
+        spec = P(cfg.dp_axes, "model", *([None] * (x.ndim - 2)))
+    else:
+        spec = P(cfg.dp_axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_sublayer(key, spec: LayerSpec, cfg: ModelConfig) -> Params:
+    ks = iter(jax.random.split(key, 8))
+    p: Params = {"norm1": layers.init_norm(cfg)}
+    if spec.mixer == "attn":
+        p["mixer"] = layers.init_attention(next(ks), cfg)
+    elif spec.mixer == "mamba":
+        p["mixer"] = ssm.init_mamba(next(ks), cfg)
+    elif spec.mixer == "rwkv6":
+        p["mixer"] = ssm.init_rwkv(next(ks), cfg)
+    if spec.cross_attn:
+        p["norm_x"] = layers.init_norm(cfg)
+        p["cross"] = layers.init_attention(next(ks), cfg)
+    if spec.mlp != "none":
+        p["norm2"] = layers.init_norm(cfg)
+    if spec.mlp == "dense":
+        p["mlp"] = layers.init_mlp(next(ks), cfg)
+    elif spec.mlp == "moe":
+        p["moe"] = moe_lib.init_moe(next(ks), cfg)
+    elif spec.mlp == "dense+moe":
+        p["mlp"] = layers.init_mlp(next(ks), cfg)
+        p["moe"] = moe_lib.init_moe(next(ks), cfg)
+    elif spec.mlp == "rwkv_cmix":
+        p["mlp"] = ssm.init_rwkv_cmix(next(ks), cfg)
+    return p
+
+
+def _init_stack(key, specs, n_blocks: int, cfg: ModelConfig) -> Params:
+    """Stack super-block params along a leading scan axis [n_blocks, ...]."""
+
+    def one(k):
+        ks = jax.random.split(k, len(specs))
+        return {f"pos{i}": _init_sublayer(ks[i], s, cfg)
+                for i, s in enumerate(specs)}
+
+    return jax.vmap(one)(jax.random.split(key, n_blocks))
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "embed": (jax.random.normal(ks[0], (cfg.padded_vocab, cfg.d_model))
+                  * 0.02).astype(dt),
+        "blocks": _init_stack(ks[1], cfg.block, cfg.n_blocks, cfg),
+        "final_norm": layers.init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.dense_init(ks[2], (cfg.d_model,
+                                                 cfg.padded_vocab), dt)
+    if cfg.is_enc_dec:
+        p["encoder"] = _init_stack(ks[3], cfg.encoder_block,
+                                   cfg.encoder_blocks, cfg)
+        p["enc_norm"] = layers.init_norm(cfg)
+        p["enc_pos"] = (jax.random.normal(ks[4], (cfg.encoder_len,
+                                                  cfg.d_model)) * 0.02).astype(dt)
+    if cfg.patch_positions:
+        p["patch_proj"] = layers.dense_init(ks[5], (cfg.d_model, cfg.d_model), dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Super-block application (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _apply_sublayer(spec: LayerSpec, p: Params, x, cfg: ModelConfig, *,
+                    positions, causal, enc_out, cache, cache_pos):
+    """One residual sub-layer. Returns (x, new_cache, aux)."""
+    new_cache: dict[str, Any] = {}
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.apply_norm(p["norm1"], x, cfg)
+    if spec.mixer == "attn":
+        y, c = layers.attention(p["mixer"], h, cfg, positions=positions,
+                                causal=causal,
+                                cache=None if cache is None else cache["attn"],
+                                cache_pos=cache_pos)
+        if c is not None:
+            new_cache["attn"] = c
+        x = x + y
+    elif spec.mixer == "mamba":
+        y, c = ssm.apply_mamba(p["mixer"], h, cfg,
+                               cache=None if cache is None else cache["mamba"])
+        new_cache["mamba"] = c
+        x = x + y
+    elif spec.mixer == "rwkv6":
+        y, c = ssm.apply_rwkv(p["mixer"], h, cfg,
+                              cache=None if cache is None else cache["rwkv"])
+        new_cache["rwkv"] = c
+        x = x + y
+    if spec.cross_attn:
+        h = layers.apply_norm(p["norm_x"], x, cfg)
+        y, c = layers.attention(
+            p["cross"], h, cfg, positions=positions, causal=False,
+            cross=True, kv_x=enc_out,
+            cache=None if cache is None else cache.get("cross"),
+            cache_pos=cache_pos)
+        if c is not None:
+            new_cache["cross"] = c
+        x = x + y
+    if spec.mlp != "none":
+        h = layers.apply_norm(p["norm2"], x, cfg)
+        if spec.mlp == "dense":
+            x = x + layers.apply_mlp(p["mlp"], h, cfg)
+        elif spec.mlp == "moe":
+            y, aux = moe_lib.apply_moe(p["moe"], h, cfg)
+            x = x + y
+        elif spec.mlp == "dense+moe":  # arctic: parallel dense residual + MoE
+            y, aux = moe_lib.apply_moe(p["moe"], h, cfg)
+            x = x + layers.apply_mlp(p["mlp"], h, cfg) + y
+        elif spec.mlp == "rwkv_cmix":
+            y, c = ssm.apply_rwkv_cmix(p["mlp"], h, cfg,
+                                       cache=None if cache is None else
+                                       cache.get("cmix"))
+            new_cache["cmix"] = c
+            x = x + y
+    return x, new_cache, aux
+
+
+def _scan_stack(params_stack, specs, x, cfg: ModelConfig, *, positions,
+                causal, enc_out=None, caches=None, cache_pos=None):
+    """Scan over stacked super-blocks. Returns (x, new_caches, aux_sum)."""
+
+    def block_fn(x, inputs):
+        pblk, cblk = inputs
+        x = _constrain_act(x, cfg)
+        aux_tot = jnp.zeros((), jnp.float32)
+        new_c = {}
+        for i, spec in enumerate(specs):
+            c_i = None if cblk is None else cblk[f"pos{i}"]
+            x, nc, aux = _apply_sublayer(
+                spec, pblk[f"pos{i}"], x, cfg, positions=positions,
+                causal=causal, enc_out=enc_out, cache=c_i,
+                cache_pos=cache_pos)
+            new_c[f"pos{i}"] = nc
+            aux_tot = aux_tot + aux
+        return x, (new_c, aux_tot)
+
+    fn = jax.checkpoint(block_fn) if cfg.remat else block_fn
+
+    n = jax.tree_util.tree_leaves(params_stack)[0].shape[0]
+    if not cfg.scan_layers:  # unrolled (dry-run cost pass)
+        ncs_list, aux_tot = [], jnp.zeros((), jnp.float32)
+        for i in range(n):
+            take = lambda t: jax.tree_util.tree_map(lambda l: l[i], t)
+            x, (nc, aux) = fn(x, (take(params_stack),
+                                  None if caches is None else take(caches)))
+            ncs_list.append(nc)
+            aux_tot = aux_tot + aux
+        ncs = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *ncs_list)
+        return x, ncs, aux_tot
+
+    def scan_body(x, inputs):
+        x, (nc, aux) = fn(x, inputs)
+        return x, (nc, aux)
+
+    if caches is None:
+        x, (ncs, auxs) = jax.lax.scan(
+            lambda x, pb: scan_body(x, (pb, None)), x, params_stack)
+    else:
+        x, (ncs, auxs) = jax.lax.scan(scan_body, x, (params_stack, caches))
+    return x, ncs, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# Train-mode forward + loss
+# ---------------------------------------------------------------------------
+
+
+def _encode(params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + params["enc_pos"].astype(x.dtype)[None, : x.shape[1]]
+    pos = jnp.arange(x.shape[1])
+    x, _, _ = _scan_stack(params["encoder"], cfg.encoder_block, x, cfg,
+                          positions=pos, causal=False)
+    return layers.apply_norm(params["enc_norm"], x, cfg)
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: Params):
+    """Token (+ modality-stub) embedding. Returns (x, positions, text_offset)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"][batch["tokens"]].astype(cdt)
+    offset = 0
+    if cfg.patch_positions:
+        patches = batch["patches"].astype(cdt)
+        patches = jnp.einsum("bpd,de->bpe", patches,
+                             params["patch_proj"].astype(cdt))
+        x = jnp.concatenate([patches, x], axis=1)
+        offset = patches.shape[1]
+    positions = jnp.arange(x.shape[1])
+    return _constrain_act(x, cfg), positions, offset
+
+
+def _logits(params: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("btd,dv->btv", x.astype(jnp.float32),
+                        head.astype(jnp.float32))
+    if cfg.padded_vocab != cfg.vocab:  # mask the vocab-padding rows
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad, jnp.finfo(jnp.float32).min, logits)
+    if cfg.dp_axes is not None and cfg.shard_logits:
+        # Keep the vocab dim sharded over `model`: decoding/loss work on the
+        # shards (local argmax/logsumexp + tiny combine) — replicating
+        # [B, 256k] f32 logits cost 53 GB/device/token on command-r decode
+        # (§Perf iteration C1).
+        logits = jax.lax.with_sharding_constraint(
+            logits, P(cfg.dp_axes, None, "model"))
+    return logits
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Params):
+    """Logits over the decoder sequence: [B, S(+patches), padded_vocab]."""
+    x, positions, offset = _embed_inputs(params, cfg, batch)
+    enc_out = _encode(params, cfg, batch["frames"]) if cfg.is_enc_dec else None
+    x, _, aux = _scan_stack(params["blocks"], cfg.block, x, cfg,
+                            positions=positions, causal=True, enc_out=enc_out)
+    x = layers.apply_norm(params["final_norm"], x, cfg)
+    return _logits(params, cfg, x), aux, offset
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Params):
+    """Next-token cross entropy (+ MoE aux + z-loss). Returns (loss, metrics)."""
+    logits, aux, offset = forward(params, cfg, batch)
+    tokens = batch["tokens"]
+    logits_text = logits[:, offset:][:, :-1]
+    targets = tokens[:, 1:]
+    mask = batch.get("loss_mask")
+    mask = jnp.ones_like(targets, jnp.float32) if mask is None else \
+        mask[:, 1:].astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits_text, axis=-1)
+    # One-hot contraction instead of take_along_axis: stays fused and keeps
+    # vocab-sharded (TP) logits local — no all-gather of [B,S,V].
+    vocab_ids = jnp.arange(logits_text.shape[-1], dtype=targets.dtype)
+    tgt_logit = jnp.sum(
+        jnp.where(vocab_ids == targets[..., None], logits_text, 0.0), axis=-1)
+    nll = (lse - tgt_logit) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = nll.sum() / denom
+    zloss = 1e-4 * ((lse * mask) ** 2).sum() / denom
+    loss = ce + zloss + aux
+    return loss, {"ce": ce, "aux": aux, "zloss": zloss,
+                  "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    """Stacked per-super-block cache pytree (leading axis = n_blocks)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def one_block(_):
+        c = {}
+        for i, spec in enumerate(cfg.block):
+            ci: dict[str, Any] = {}
+            if spec.mixer == "attn":
+                ci["attn"] = layers.init_attn_cache(cfg, batch, max_len, cdt)
+            elif spec.mixer == "mamba":
+                ci["mamba"] = ssm.init_mamba_cache(cfg, batch)
+            elif spec.mixer == "rwkv6":
+                ci["rwkv"] = ssm.init_rwkv_cache(cfg, batch)
+            if spec.cross_attn:
+                hd = cfg.resolved_head_dim
+                ci["cross"] = {
+                    "k": jnp.zeros((batch, cfg.encoder_len, cfg.n_kv_heads, hd), cdt),
+                    "v": jnp.zeros((batch, cfg.encoder_len, cfg.n_kv_heads, hd), cdt),
+                }
+            if spec.mlp == "rwkv_cmix":
+                ci["cmix"] = {"shift": jnp.zeros((batch, 1, cfg.d_model), cdt)}
+            c[f"pos{i}"] = ci
+        return c
+
+    return jax.vmap(one_block)(jnp.arange(cfg.n_blocks))
+
+
+def _fill_cross_caches(params, cfg: ModelConfig, caches, enc_out):
+    """Precompute per-layer cross-attention K/V from encoder output."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def per_block(pblk, cblk):
+        for i, spec in enumerate(cfg.block):
+            if spec.cross_attn:
+                pa = pblk[f"pos{i}"]["cross"]
+                k = jnp.einsum("btd,dhk->bthk", enc_out.astype(cdt),
+                               pa["wk"].astype(cdt))
+                v = jnp.einsum("btd,dhk->bthk", enc_out.astype(cdt),
+                               pa["wv"].astype(cdt))
+                cblk = dict(cblk)
+                ci = dict(cblk[f"pos{i}"])
+                ci["cross"] = {"k": k, "v": v}
+                cblk[f"pos{i}"] = ci
+        return cblk
+
+    return jax.vmap(per_block, in_axes=(0, 0))(params["blocks"], caches)
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Params, max_len: int):
+    """Run the prompt through the stack, returning (last_logits, cache).
+
+    ``max_len`` is the total KV-cache capacity of the *embedded* sequence —
+    for VLM configs it must include ``cfg.patch_positions`` prefix slots.
+    """
+    x, positions, offset = _embed_inputs(params, cfg, batch)
+    b, t = x.shape[:2]
+    caches = init_cache(cfg, b, max_len)
+    enc_out = None
+    if cfg.is_enc_dec:
+        enc_out = _encode(params, cfg, batch["frames"])
+        caches = _fill_cross_caches(params, cfg, caches, enc_out)
+    x, caches, _ = _scan_stack(params["blocks"], cfg.block, x, cfg,
+                               positions=positions, causal=True,
+                               enc_out=enc_out, caches=caches,
+                               cache_pos=jnp.zeros((), jnp.int32))
+    x = layers.apply_norm(params["final_norm"], x[:, -1:], cfg)
+    logits = _logits(params, cfg, x)
+    return logits[:, 0], {"blocks": caches, "pos": jnp.array(t, jnp.int32)}
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens: jnp.ndarray):
+    """One token step: tokens [B, 1] -> (logits [B, vocab], new cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    pos = cache["pos"]
+    x = params["embed"][tokens].astype(cdt)
+    positions = pos + jnp.arange(tokens.shape[1])
+    x, caches, _ = _scan_stack(params["blocks"], cfg.block, x, cfg,
+                               positions=positions, causal=True,
+                               caches=cache["blocks"], cache_pos=pos)
+    x = layers.apply_norm(params["final_norm"], x[:, -1:], cfg)
+    logits = _logits(params, cfg, x)
+    return logits[:, 0], {"blocks": caches, "pos": pos + tokens.shape[1]}

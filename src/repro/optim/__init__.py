@@ -1,0 +1,4 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm  # noqa: F401
+from .schedules import warmup_cosine, wsd  # noqa: F401
+from .compression import compressed_psum, init_residual  # noqa: F401
+from .orthogonal import orthogonalize, orthogonalized_update  # noqa: F401

@@ -1,0 +1,48 @@
+"""QR-orthogonalized optimizer updates — a beyond-paper use of FiGaRo's TSQR.
+
+Muon-style orthogonalization of 2-D weight updates, but via the R factor from
+the paper's post-processing machinery instead of Newton–Schulz iterations:
+``orth(G) = G·R⁻¹`` where ``G = QR`` (so orth(G) = Q, the closest orthonormal
+frame in the polar-ish sense for well-conditioned G). The R factor comes from
+`core.postprocess.tsqr_r` — on a mesh, from `core.distributed.distributed_qr_r`
+— i.e. the exact THIN/TSQR code path the paper uses for R₀ post-processing.
+
+Opt-in (off by default) so the paper-faithful baseline stays clean.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.postprocess import tsqr_r
+
+
+def orthogonalize(g: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Return Q of the thin QR of g (tall orientation), via TSQR."""
+    m, n = g.shape
+    transpose = m < n
+    a = g.T if transpose else g
+    a32 = a.astype(jnp.float32)
+    r = tsqr_r(a32, leaf_rows=max(256, a.shape[1]))
+    # Solve a = q r  =>  q = a r^-1 (triangular solve, regularized).
+    rr = r + eps * jnp.eye(r.shape[0], dtype=r.dtype)
+    q = jax.scipy.linalg.solve_triangular(rr, a32.T, lower=False, trans=1).T
+    q = q * jnp.sqrt(jnp.asarray(q.shape[1], jnp.float32))  # RMS-norm scale
+    out = q.T if transpose else q
+    return out.astype(g.dtype)
+
+
+def orthogonalized_update(grads: Any, *, min_dim: int = 2) -> Any:
+    """Apply TSQR orthogonalization to every 2-D leaf (others unchanged)."""
+
+    def one(path, g):
+        if g.ndim == 2 and min(g.shape) >= min_dim:
+            return orthogonalize(g)
+        if g.ndim == 3:  # scan-stacked [n_blocks, a, b]
+            return jax.vmap(orthogonalize)(g)
+        return g
+
+    return jax.tree_util.tree_map_with_path(one, grads)

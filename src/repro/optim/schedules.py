@@ -1,0 +1,33 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, the minicpm schedule)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn
+
+
+def wsd(peak: float, warmup: int, stable: int, decay: int,
+        floor: float = 0.01):
+    """MiniCPM's warmup-stable-decay: linear warmup, flat plateau, then an
+    exponential-ish decay tail — enables continued pretraining from the
+    plateau (arXiv:2404.06395)."""
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        t = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        tail = peak * jnp.exp(jnp.log(jnp.maximum(floor, 1e-8)) * t)
+        return jnp.where(step < warmup, warm,
+                         jnp.where(step < warmup + stable, peak, tail))
+
+    return fn

@@ -1,0 +1,1 @@
+from .rules import param_specs, param_shardings, batch_specs, data_axes  # noqa: F401

@@ -1,0 +1,163 @@
+"""Parameter/activation PartitionSpecs per architecture family.
+
+Axis roles (launch/mesh.py):
+  pod    — outermost data parallelism (multi-pod; gradient-compression boundary)
+  data   — data parallelism; also FSDP weight sharding when ``cfg.fsdp``
+  model  — tensor parallelism (attention heads, ff, vocab) and expert
+           parallelism (when num_experts % |model| == 0)
+
+KV-head caveat: the assigned archs have kv=8 < |model|=16, so KV projections
+are replicated over `model` (standard GQA practice) while Q heads shard.
+
+Scan-stacked block params carry a leading [n_blocks] axis -> specs get a
+leading None.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+__all__ = ["param_specs", "param_shardings", "batch_specs", "data_axes"]
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _join(*axes):
+    """Combine axis names into one PartitionSpec entry (drop Nones)."""
+    axes = tuple(a for a in axes if a is not None)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _rules(cfg: ModelConfig, mesh: Mesh) -> list[tuple[str, P]]:
+    fs = "data" if cfg.fsdp and "data" in mesh.shape else None
+    msz = mesh.shape.get("model", 1)
+    kv_ok = cfg.n_kv_heads % msz == 0
+    ep = cfg.moe is not None and cfg.moe.num_experts % msz == 0
+    hd_heads = cfg.n_heads % msz == 0
+    rw_heads = (cfg.d_model // (cfg.rwkv.head_size if cfg.rwkv else 64)) \
+        % msz == 0
+    # Column-parallel attention (heads over `model`) when head counts divide
+    # the axis; otherwise row-parallel fallback (d_model over model(+data)) —
+    # arctic/llava (56H), minicpm (36H), whisper (6H) on a 16-way axis.
+    if hd_heads:
+        wq = P(fs, "model", None)
+        wo = P("model", None, fs)
+    else:
+        wq = P(_join("model", fs), None, None)
+        wo = P(None, None, _join("model", fs))
+    wkv = P(fs, "model", None) if kv_ok else \
+        (P(fs, None, None) if hd_heads else P(_join("model", fs), None, None))
+    return [
+        (r"embed$", P("model", fs)),
+        (r"lm_head$", P(fs, "model")),
+        (r"patch_proj$", P(fs, "model")),
+        (r"enc_pos$", P()),
+        # attention
+        (r"(mixer|cross)/wq$", wq),
+        (r"(mixer|cross)/wk$", wkv),
+        (r"(mixer|cross)/wv$", wkv),
+        (r"(mixer|cross)/wo$", wo),
+        (r"(q_norm|k_norm)$", P()),
+        # dense mlp
+        (r"mlp/w_gate$", P(fs, "model")),
+        (r"mlp/w_up$", P(fs, "model")),
+        (r"mlp/w_down$", P("model", fs)),
+        # moe
+        (r"moe/router$", P(fs, None)),
+        (r"moe/w_gate$", P("model", fs, None) if ep else P(None, fs, "model")),
+        (r"moe/w_up$", P("model", fs, None) if ep else P(None, fs, "model")),
+        (r"moe/w_down$", P("model", None, fs) if ep else P(None, "model", fs)),
+        # mamba
+        (r"mixer/in_proj$", P(fs, "model")),
+        (r"mixer/conv_w$", P(None, "model")),
+        (r"mixer/conv_b$", P("model")),
+        (r"mixer/x_proj$", P("model", None)),
+        (r"mixer/dt_proj$", P(None, "model")),
+        (r"mixer/dt_bias$", P("model")),
+        (r"mixer/a_log$", P("model", None)),
+        (r"mixer/d_skip$", P("model")),
+        (r"mixer/out_proj$", P("model", fs)),
+        # rwkv6 time-mix
+        (r"mixer/w[rkvg]$", P(fs, "model")),
+        (r"mixer/wo$", P("model", fs)),
+        (r"mixer/bonus$", P("model" if rw_heads else None, None)),
+        (r"mixer/(mu|mix_w1|mix_w2|w0|decay_w1|decay_w2|ln_x)$", P()),
+        # rwkv channel-mix (under mlp/)
+        (r"mlp/wk$", P(fs, "model")),
+        (r"mlp/wv$", P("model", fs)),
+        (r"mlp/wr$", P(fs, "model")),
+        (r"mlp/(mu_k|mu_r)$", P()),
+        # norms & leftovers
+        (r"(norm1|norm2|norm_x|final_norm|enc_norm)/", P()),
+        (r".*", P()),
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape: Any):
+    """PartitionSpec pytree matching ``params_shape`` (shapes or arrays)."""
+    rules = _rules(cfg, mesh)
+
+    def spec_for(path, leaf) -> P:
+        s = _path_str(path)
+        stacked = bool(re.search(r"(^|/)(blocks|encoder)/", s))
+        for pat, spec in rules:
+            if re.search(pat, s):
+                parts = list(spec)
+                if stacked:
+                    parts = [None] + parts
+                ndim = len(leaf.shape)
+                parts = parts[:ndim] + [None] * (ndim - len(parts))
+                # Drop axis shardings that do not divide the dim at all
+                # (uneven is fine — zero-size shards are not).
+                fixed = []
+                for dim, ax in zip(leaf.shape, parts):
+                    if ax is None:
+                        fixed.append(None)
+                        continue
+                    axsz = mesh.shape[ax] if isinstance(ax, str) else \
+                        max(mesh.shape[a] for a in (ax if isinstance(ax, tuple) else (ax,)))
+                    fixed.append(ax if dim >= axsz else None)
+                return P(*fixed)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape: Any):
+    specs = param_specs(cfg, mesh, params_shape)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, *, shard_seq: bool = False):
+    """Input shardings: batch over (pod, data); optionally seq over data
+    (context-parallel long-context decode with global_batch=1)."""
+    dp = data_axes(mesh)
+    if shard_seq:
+        return {"tokens": P(None, None)}
+    return {
+        "tokens": P(dp, None),
+        "frames": P(dp, None, None),
+        "patches": P(dp, None, None),
+        "loss_mask": P(dp, None),
+    }

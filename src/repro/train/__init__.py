@@ -1,0 +1,2 @@
+from .step import TrainState, init_state, make_train_step, make_eval_step  # noqa: F401
+from .serve import make_prefill, make_decode_step, cache_specs, sample_loop  # noqa: F401

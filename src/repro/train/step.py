@@ -1,0 +1,123 @@
+"""Train/eval steps: sharded loss+grad+update with optional microbatching.
+
+``make_train_step`` returns a function suitable both for real execution and
+for the dry-run's ``jax.jit(...).lower().compile()`` — all sharding is
+declared via in_shardings (params/opt-state from sharding/rules.py, batch
+from batch_specs) and activation constraints at block boundaries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.orthogonal import orthogonalized_update
+from repro.sharding.rules import data_axes
+
+__all__ = ["TrainState", "init_state", "make_train_step", "make_eval_step"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+def init_state(key, cfg: ModelConfig, opt_cfg: AdamWConfig) -> TrainState:
+    params = tf.init_params(key, cfg)
+    return TrainState(params=params, opt_state=adamw_init(params, opt_cfg),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def _constrain_batch(batch, mesh: Mesh):
+    dp = data_axes(mesh)
+
+    def c(x):
+        spec = P(dp, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    return jax.tree_util.tree_map(c, batch)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    mesh: Mesh,
+    *,
+    microbatch: int | None = None,
+    orthogonal_update: bool = False,
+) -> Callable[[TrainState, Any], tuple[TrainState, dict]]:
+    """Build the jittable train step (fwd+bwd+AdamW update).
+
+    ``microbatch``: split the per-step batch into this many sequential
+    micro-steps with gradient accumulation (lax.scan) — compute/memory knob.
+    ``orthogonal_update``: TSQR-orthogonalize 2-D gradients (beyond-paper,
+    powered by the paper's THIN machinery; see optim/orthogonal.py).
+    """
+
+    def loss(params, batch):
+        return tf.loss_fn(params, cfg, batch)
+
+    def grads_of(params, batch):
+        (l, metrics), g = jax.value_and_grad(loss, has_aux=True)(params, batch)
+        return l, metrics, g
+
+    def step_fn(state: TrainState, batch: Any):
+        batch = _constrain_batch(batch, mesh)
+        if microbatch and microbatch > 1:
+            dp = data_axes(mesh)
+
+            def split(x):
+                b = x.shape[0]
+                # (B,) -> (B/micro, micro) -> (micro, B/micro): row j*micro+m
+                # lands in micro m, so every micro-step draws one row per
+                # device block — the batch dim stays sharded over `dp` and the
+                # sequential micro axis stays unpartitioned.
+                x = x.reshape((b // microbatch, microbatch) + x.shape[1:])
+                x = jnp.swapaxes(x, 0, 1)
+                return jax.lax.with_sharding_constraint(
+                    x, P(None, dp, *([None] * (x.ndim - 2))))
+
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def acc_fn(carry, mb):
+                l, m, g = grads_of(state.params, mb)
+                gsum, lsum = carry
+                gsum = jax.tree_util.tree_map(jnp.add, gsum, g)
+                return (gsum, lsum + l), m
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (gsum, lsum), ms = jax.lax.scan(acc_fn, (g0, 0.0), micro)
+            g = jax.tree_util.tree_map(lambda x: x / microbatch, gsum)
+            l = lsum / microbatch
+            metrics = jax.tree_util.tree_map(lambda x: x[-1], ms)
+        else:
+            l, metrics, g = grads_of(state.params, batch)
+        if orthogonal_update:
+            g = orthogonalized_update(g)
+        new_params, new_opt, opt_metrics = adamw_update(
+            g, state.opt_state, state.params, opt_cfg)
+        metrics = dict(metrics, loss=l, **opt_metrics)
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return step_fn
+
+
+def make_eval_step(cfg: ModelConfig, mesh: Mesh):
+    def eval_fn(params, batch):
+        batch = _constrain_batch(batch, mesh)
+        loss, metrics = tf.loss_fn(params, cfg, batch)
+        return dict(metrics, loss=loss)
+
+    return eval_fn

@@ -1,0 +1,81 @@
+"""Prefill+decode must reproduce the train-mode forward logits exactly
+(same params, same tokens) — KV caches, SSM states, RWKV states, sliding
+windows and cross-attention all have to line up for this to hold."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as tf
+
+ARCHS = ["granite-3-8b", "rwkv6-1.6b", "jamba-v0.1-52b", "whisper-tiny",
+         "mixtral-8x22b", "llava-next-34b"]
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_decode_matches_forward(name):
+    cfg = get_config(name, smoke=True)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32",
+                              param_dtype="float32")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    b, s, extra = 2, 17, 3
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s + extra), 0,
+                              cfg.vocab)
+    batch_full = {"tokens": toks}
+    batch_pre = {"tokens": toks[:, :s]}
+    if cfg.is_enc_dec:
+        fr = jax.random.normal(jax.random.PRNGKey(2),
+                               (b, cfg.encoder_len, cfg.d_model), jnp.float32)
+        batch_full["frames"] = fr
+        batch_pre["frames"] = fr
+    if cfg.patch_positions:
+        pa = jax.random.normal(jax.random.PRNGKey(3),
+                               (b, cfg.patch_positions, cfg.d_model),
+                               jnp.float32)
+        batch_full["patches"] = pa
+        batch_pre["patches"] = pa
+    logits_full, _, off = tf.forward(params, cfg, batch_full)
+    lg, cache = tf.prefill(params, cfg, batch_pre,
+                           s + extra + cfg.patch_positions)
+    errs = [np.abs(np.asarray(lg) -
+                   np.asarray(logits_full[:, off + s - 1])).max()]
+    for j in range(extra):
+        lg, cache = tf.decode_step(params, cfg, cache, toks[:, s + j][:, None])
+        errs.append(np.abs(np.asarray(lg) -
+                           np.asarray(logits_full[:, off + s + j])).max())
+    scale = np.abs(np.asarray(logits_full)).max()
+    assert max(errs) < 2e-3 * max(scale, 1.0), (name, errs)
+
+
+def test_cache_position_advances():
+    cfg = get_config("granite-3-8b", smoke=True)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, 5), 0,
+                                          cfg.vocab)}
+    _, cache = tf.prefill(params, cfg, batch, 16)
+    assert int(cache["pos"]) == 5
+    tok = jnp.zeros((1, 1), jnp.int32)
+    _, cache = tf.decode_step(params, cfg, cache, tok)
+    assert int(cache["pos"]) == 6
+
+
+def test_swa_decode_window_bounded():
+    """Mixtral's sliding-window cache: decoding far past the window keeps
+    logits finite and, once the window has slid, early tokens stop mattering."""
+    cfg = get_config("mixtral-8x22b", smoke=True)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32",
+                              param_dtype="float32", swa_window=8)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    b, s = 1, 12
+    t1 = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    t2 = t1.at[:, 0].set((t1[:, 0] + 1) % cfg.vocab)  # differ only at pos 0
+    l1, _, _ = tf.forward(params, cfg, {"tokens": t1})
+    l2, _, _ = tf.forward(params, cfg, {"tokens": t2})
+    # With window 8 and a 2-layer stack, position 11 can still see pos 0
+    # transitively through depth; so only check finiteness + shape here.
+    assert np.isfinite(np.asarray(l1)).all()
+    assert l1.shape == l2.shape

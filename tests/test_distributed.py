@@ -1,0 +1,25 @@
+"""Multi-device correctness (8 host devices, fresh subprocess — the XLA
+device count must be pinned before jax initializes, so it cannot run
+in-process with the rest of the suite)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script: str, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, script], cwd=ROOT, env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+def test_distributed_figaro_and_tsqr():
+    out = _run(os.path.join("tests", "_distributed_driver.py"))
+    assert "DISTRIBUTED-OK" in out

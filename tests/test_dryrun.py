@@ -1,0 +1,39 @@
+"""Dry-run integration: lower+compile on the production meshes (512 host
+devices in a subprocess), reduced configs for CI speed. The full-size 40-cell
+sweep is the deliverable recorded in EXPERIMENTS.md §Dry-run."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _dryrun(args, timeout=1200):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--out", ""] + args
+    out = subprocess.run(cmd, cwd=ROOT, env=env, capture_output=True,
+                         text=True, timeout=timeout)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+def test_smoke_cell_single_pod():
+    out = _dryrun(["--arch", "granite-3-8b", "--shape", "train_4k",
+                   "--mesh", "single", "--smoke"])
+    assert "[ok]" in out
+
+
+def test_smoke_cell_multi_pod():
+    out = _dryrun(["--arch", "rwkv6-1.6b", "--shape", "long_500k",
+                   "--mesh", "multi", "--smoke"])
+    assert "[ok]" in out
+
+
+def test_skip_rule_applies():
+    out = _dryrun(["--arch", "qwen3-8b", "--shape", "long_500k",
+                   "--mesh", "single", "--smoke"])
+    assert "[skip]" in out

@@ -1,0 +1,77 @@
+"""kernels/flash_attn vs ref.py oracle (interpret mode) + model integration."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels.flash_attn import ops as fa_ops
+from repro.kernels.flash_attn import ref as fa_ref
+from repro.models import transformer as tf
+
+
+def _ref_folded(q, k, v, qpos, kpos, causal, window):
+    b, tq, hq, hd = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qh = (q.reshape(b, tq, hkv, g, hd).transpose(0, 2, 3, 1, 4)
+          .reshape(b * hkv * g, tq, hd))
+    kh = jnp.repeat(k.transpose(0, 2, 1, 3).reshape(b * hkv, tk, hd), g, 0)
+    vh = jnp.repeat(v.transpose(0, 2, 1, 3).reshape(b * hkv, tk, hd), g, 0)
+    qp = jnp.broadcast_to(qpos[None], (b * hkv * g, tq))
+    kp = jnp.broadcast_to(kpos[None], (b * hkv * g, tk))
+    out = fa_ref.flash_attention_ref(qh, kh, vh, qp, kp, causal=causal,
+                                     window=window)
+    return (out.reshape(b, hkv, g, tq, hd).transpose(0, 3, 1, 2, 4)
+            .reshape(b, tq, hq, hd))
+
+
+@pytest.mark.parametrize("b,tq,tk,hq,hkv,hd,causal,window", [
+    (1, 8, 8, 2, 2, 128, True, None),
+    (2, 128, 128, 4, 2, 128, True, None),
+    (1, 100, 260, 4, 4, 128, True, None),   # unaligned; tk > tq (KV cache)
+    (2, 128, 384, 8, 2, 128, True, 96),     # GQA + sliding window
+    (1, 64, 64, 2, 1, 256, False, None),    # non-causal (encoder)
+])
+def test_flash_vs_ref(rng, b, tq, tk, hq, hkv, hd, causal, window):
+    q = jnp.array(rng.normal(size=(b, tq, hq, hd)), jnp.float32)
+    k = jnp.array(rng.normal(size=(b, tk, hkv, hd)), jnp.float32)
+    v = jnp.array(rng.normal(size=(b, tk, hkv, hd)), jnp.float32)
+    qpos = jnp.arange(tk - tq, tk, dtype=jnp.int32)
+    kpos = jnp.arange(tk, dtype=jnp.int32)
+    out_k = fa_ops.flash_attention(q, k, v, qpos, kpos, causal=causal,
+                                   window=window, block_q=64, block_kv=128)
+    out_r = _ref_folded(q, k, v, qpos, kpos, causal, window)
+    assert float(jnp.abs(out_k - out_r).max()) < 2e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(rng, dtype):
+    q = jnp.array(rng.normal(size=(1, 64, 4, 128)), dtype)
+    k = jnp.array(rng.normal(size=(1, 64, 4, 128)), dtype)
+    v = jnp.array(rng.normal(size=(1, 64, 4, 128)), dtype)
+    pos = jnp.arange(64, dtype=jnp.int32)
+    out_k = fa_ops.flash_attention(q, k, v, pos, pos, block_q=64,
+                                   block_kv=64)
+    out_r = _ref_folded(q, k, v, pos, pos, True, None)
+    assert out_k.dtype == dtype
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    assert float(jnp.abs(out_k.astype(jnp.float32)
+                         - out_r.astype(jnp.float32)).max()) < tol
+
+
+def test_model_forward_with_flash_kernel_matches_default():
+    cfg = get_config("granite-3-8b", smoke=True)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32",
+                              param_dtype="float32", head_dim=128)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
+                                          cfg.vocab)}
+    l1, _, _ = tf.forward(params, cfg, batch)
+    cfg_f = dataclasses.replace(cfg, use_flash_kernel=True)
+    l2, _, _ = tf.forward(params, cfg_f, batch)
+    err = float(jnp.abs(l1 - l2).max())
+    assert err < 1e-3 * float(jnp.abs(l1).max()), err

@@ -1,0 +1,73 @@
+"""§7 post-processing: R0 -> R triangularization variants (incl. THIN/TSQR)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.postprocess import (blocked_qr_r, householder_qr_r,
+                                    normalize_sign, tsqr_r)
+from repro.core.qr import givens_qr_r
+
+
+def _variants(x, **kw):
+    return {
+        "householder": householder_qr_r(x),
+        "blocked": blocked_qr_r(x, panel=kw.get("panel", 8)),
+        "tsqr": tsqr_r(x, leaf_rows=kw.get("leaf_rows", 16)),
+        "lapack": jnp.linalg.qr(x, mode="r"),
+    }
+
+
+@pytest.mark.parametrize("m,n", [(12, 3), (70, 9), (33, 32), (128, 16)])
+def test_qr_variants_agree(rng, m, n):
+    x = jnp.array(rng.normal(size=(m, n)))
+    rs = {k: np.asarray(normalize_sign(v)) for k, v in _variants(x).items()}
+    base = rs.pop("lapack")
+    for name, r in rs.items():
+        np.testing.assert_allclose(r, base, atol=1e-9 * np.abs(base).max(),
+                                   err_msg=name)
+
+
+def test_givens_dense_qr(rng):
+    x = jnp.array(rng.normal(size=(20, 6)))
+    r = np.asarray(normalize_sign(givens_qr_r(x)))
+    ref = np.asarray(normalize_sign(jnp.linalg.qr(x, mode="r")))
+    np.testing.assert_allclose(r, ref, atol=1e-10 * np.abs(ref).max())
+
+
+def test_normalize_sign_makes_diag_positive(rng):
+    x = jnp.array(rng.normal(size=(30, 7)))
+    r = np.asarray(normalize_sign(jnp.linalg.qr(x, mode="r")))
+    assert (np.diag(r) >= 0).all()
+
+
+def test_tsqr_leaf_insensitivity(rng):
+    """TSQR's combine order (leaf size) must not change R — the same freedom
+    the paper's THIN exploits across threads."""
+    x = jnp.array(rng.normal(size=(200, 10)))
+    rs = [np.asarray(normalize_sign(tsqr_r(x, leaf_rows=lr)))
+          for lr in (16, 32, 64, 200)]
+    for r in rs[1:]:
+        np.testing.assert_allclose(r, rs[0], atol=1e-9 * np.abs(rs[0]).max())
+
+
+def test_gram_preserved_by_all_variants(rng):
+    x = jnp.array(rng.normal(size=(50, 8)))
+    g = np.asarray(x.T @ x)
+    for name, r in _variants(x).items():
+        rn = np.asarray(r)
+        np.testing.assert_allclose(rn.T @ rn, g, rtol=1e-9, atol=1e-9,
+                                   err_msg=name)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(4, 60), n=st.integers(1, 8), seed=st.integers(0, 2**31))
+def test_property_tsqr_equals_lapack(m, n, seed):
+    if m < n:
+        return
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.normal(size=(m, n)))
+    r1 = np.asarray(normalize_sign(tsqr_r(x, leaf_rows=8)))
+    r2 = np.asarray(normalize_sign(jnp.linalg.qr(x, mode="r")))
+    np.testing.assert_allclose(r1, r2, atol=1e-8 * max(np.abs(r2).max(), 1))

@@ -1,0 +1,98 @@
+"""Downstream LA over joins: SVD, PCA, least squares (paper §1/§10) +
+the Exp-4 reverse-engineered accuracy construction."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.figaro import figaro_r0
+from repro.core.join_tree import build_plan
+from repro.core.materialize import materialize_join
+from repro.core.qr import figaro_qr, implicit_q_gram_check
+from repro.core.svd import (join_column_moments, least_squares_over_join,
+                            pca_over_join, svd_over_join)
+from repro.data.relational import accuracy_db
+
+from helpers import random_acyclic_db
+
+
+def test_svd_over_join_matches_numpy(rng):
+    _, tree, plan = random_acyclic_db("snowflake4", rng)
+    a = np.asarray(materialize_join(tree))
+    s, vt = svd_over_join(plan)
+    s_ref = np.linalg.svd(a, compute_uv=False)
+    np.testing.assert_allclose(np.asarray(s), s_ref[: len(s)], rtol=1e-8)
+    # right singular vectors agree up to sign
+    _, _, vt_ref = np.linalg.svd(a, full_matrices=False)
+    dots = np.abs(np.sum(np.asarray(vt) * vt_ref, axis=1))
+    np.testing.assert_allclose(dots, 1.0, atol=1e-6)
+
+
+def test_pca_over_join_matches_numpy(rng):
+    _, tree, plan = random_acyclic_db("star3", rng)
+    a = np.asarray(materialize_join(tree))
+    k = min(3, a.shape[1])
+    pca = pca_over_join(plan, k=k)
+    ac = a - a.mean(axis=0)
+    cov = ac.T @ ac / (a.shape[0] - 1)
+    ev_ref = np.sort(np.linalg.eigvalsh(cov))[::-1][:k]
+    np.testing.assert_allclose(np.asarray(pca.explained_variance), ev_ref,
+                               rtol=1e-7, atol=1e-10)
+
+
+def test_column_moments_match_join(rng):
+    _, tree, plan = random_acyclic_db("chain3", rng)
+    a = np.asarray(materialize_join(tree))
+    sums, total = join_column_moments(plan)
+    assert int(total) == a.shape[0]
+    np.testing.assert_allclose(np.asarray(sums) / float(total),
+                               a.mean(axis=0), rtol=1e-10)
+
+
+def test_least_squares_over_join(rng):
+    _, tree, plan = random_acyclic_db("snowflake4", rng)
+    a = np.asarray(materialize_join(tree))
+    if a.shape[1] < 2 or a.shape[0] <= a.shape[1]:
+        pytest.skip("needs at least 2 cols and tall A")
+    beta, resid = least_squares_over_join(plan, label_col=plan.num_cols - 1)
+    beta_ref, *_ = np.linalg.lstsq(a[:, :-1], a[:, -1], rcond=None)
+    np.testing.assert_allclose(np.asarray(beta), beta_ref, rtol=1e-6,
+                               atol=1e-8)
+    res_ref = np.linalg.norm(a[:, :-1] @ beta_ref - a[:, -1])
+    np.testing.assert_allclose(np.asarray(resid), res_ref, rtol=1e-6,
+                               atol=1e-8)
+
+
+def test_implicit_q_gram_check(rng):
+    """Q = A R⁻¹ is orthogonal ⟺ R⁻ᵀ(AᵀA)R⁻¹ == I — checked without
+    materializing A (the paper computes Q this way, §8)."""
+    _, tree, plan = random_acyclic_db("star3", rng)
+    a = np.asarray(materialize_join(tree))
+    r = figaro_qr(plan, dtype=jnp.float64)
+    dev = implicit_q_gram_check(r, jnp.array(a.T @ a))
+    assert float(dev) < 1e-10
+
+
+# -- Exp 4: ground-truth accuracy construction --------------------------------
+
+
+@pytest.mark.parametrize("p,q,n", [(16, 12, 4), (64, 32, 8)])
+def test_accuracy_db_ground_truth(p, q, n):
+    tree, r_fixed = accuracy_db(p, q, n, seed=9)
+    plan = build_plan(tree)
+    r = np.asarray(figaro_qr(plan, dtype=jnp.float64))
+    # The T-block of R (last n columns, rows n..2n) equals R_fixed up to sign.
+    blk = r[n:, n:]
+    sign = np.sign(np.diag(blk)) * np.sign(np.diag(r_fixed))
+    np.testing.assert_allclose(blk * sign[:, None], r_fixed, rtol=1e-9,
+                               atol=1e-9)
+
+
+def test_accuracy_db_is_consistent_with_materialized():
+    tree, r_fixed = accuracy_db(10, 8, 3, seed=2)
+    a = np.asarray(materialize_join(tree))
+    r_ref = np.linalg.qr(a)[1]
+    r_ref *= np.sign(np.diag(r_ref))[:, None]
+    blk = r_ref[3:, 3:]
+    np.testing.assert_allclose(np.abs(blk), np.abs(r_fixed), rtol=1e-8,
+                               atol=1e-8)

@@ -1,0 +1,85 @@
+"""End-to-end behaviour of the whole system (paper pipeline + LM framework)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, SHAPES, cell_is_runnable, get_config
+from repro.core.join_tree import build_plan
+from repro.core.materialize import join_output_rows, materialize_join
+from repro.core.qr import figaro_qr, materialized_qr
+from repro.data.relational import yelp_like
+from repro.launch.roofline import PEAK_FLOPS, Roofline, collective_bytes
+
+
+def test_end_to_end_figaro_vs_materialized_many_to_many():
+    """The paper's headline: same R as the materialized-join QR, computed
+    from the (much smaller) input database."""
+    tree = yelp_like(scale=80)
+    plan = build_plan(tree)
+    a = materialize_join(tree)
+    assert a.shape[0] > 4 * sum(nd.data.shape[0] for nd in plan.nodes)
+    r_fig = np.asarray(figaro_qr(plan, dtype=jnp.float64))
+    r_mat = np.asarray(materialized_qr(tree))
+    err = np.abs(r_fig - r_mat).max() / np.abs(r_mat).max()
+    assert err < 1e-8, err
+
+
+def test_join_output_rows_matches_materialized():
+    tree = yelp_like(scale=50)
+    assert join_output_rows(tree) == materialize_join(tree).shape[0]
+
+
+def test_cell_matrix_is_complete():
+    """The assigned 10×4 = 40 cells: all defined, skips only where the task
+    spec directs (long_500k for pure full-attention archs)."""
+    n_total, n_skip = 0, 0
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            n_total += 1
+            ok, why = cell_is_runnable(cfg, shape)
+            if not ok:
+                n_skip += 1
+                assert shape.name == "long_500k", (arch, shape.name)
+                assert not cfg.subquadratic
+    assert n_total == 40
+    assert n_skip == 7  # whisper/arctic/minicpm/command-r/granite/qwen3/llava
+    for arch in ("rwkv6-1.6b", "jamba-v0.1-52b", "mixtral-8x22b"):
+        assert get_config(arch).subquadratic
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  ENTRY main {
+    %x = f32[128,512]{1,0} parameter(0)
+    %ag = f32[256,512] all-gather(f32[128,512] %x), replica_groups={}
+    %ar = f32[128,512] all-reduce(f32[128,512] %x), to_apply=%add
+    %rs = f32[64,512] reduce-scatter(f32[128,512] %x), dimensions={0}
+    %cp = f32[128,512] collective-permute(f32[128,512] %x), pairs={{0,1}}
+    %dot = f32[512,512] dot(f32[128,512] %x, f32[128,512] %x)
+  }
+  """
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 128 * 512 * 4
+    assert out["all-reduce"] == 128 * 512 * 4
+    assert out["reduce-scatter"] == 128 * 512 * 4
+    assert out["collective-permute"] == 128 * 512 * 4
+    assert out["all-to-all"] == 0
+
+
+def test_roofline_terms():
+    rl = Roofline(arch="x", shape="train_4k", mesh="16x16", chips=256,
+                  flops_per_device=PEAK_FLOPS, bytes_per_device=819e9 * 2,
+                  coll_bytes_per_device=50e9 * 0.5, coll_breakdown={},
+                  peak_memory_per_device=1e9,
+                  model_flops=PEAK_FLOPS * 256 * 0.5,
+                  compute_s=1.0, memory_s=2.0, collective_s=0.5)
+    assert rl.compute_s == 1.0
+    assert rl.memory_s == 2.0
+    assert rl.collective_s == 0.5
+    assert rl.dominant == "memory"
+    assert rl.step_s == 2.0
+    assert rl.mfu == 0.25  # 0.5 useful flops / 2.0s step at peak

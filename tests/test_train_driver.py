@@ -1,0 +1,39 @@
+"""Fault-tolerant driver: train -> checkpoint -> restart -> resume."""
+
+import os
+
+import numpy as np
+
+from repro.launch.train import main as train_main
+
+
+def test_driver_trains_and_auto_resumes(tmp_path, capsys):
+    ckpt = str(tmp_path / "ckpt")
+    rc = train_main([
+        "--arch", "granite-3-8b", "--smoke", "--steps", "6", "--batch", "4",
+        "--seq", "32", "--ckpt-dir", ckpt, "--ckpt-every", "3",
+        "--log-every", "2", "--warmup", "2",
+    ])
+    assert rc == 0
+    out1 = capsys.readouterr().out
+    assert "step     6" in out1
+    steps = sorted(int(f.split("_")[1].split(".")[0])
+                   for f in os.listdir(ckpt) if f.endswith(".npz"))
+    assert 6 in steps
+    # Restart: must auto-resume from step 6 and run only steps 7..10.
+    rc = train_main([
+        "--arch", "granite-3-8b", "--smoke", "--steps", "10", "--batch", "4",
+        "--seq", "32", "--ckpt-dir", ckpt, "--ckpt-every", "100",
+        "--log-every", "2", "--warmup", "2",
+    ])
+    assert rc == 0
+    out2 = capsys.readouterr().out
+    assert "resumed from step 6" in out2
+    assert "steps 6->10" in out2
+
+
+def test_driver_no_checkpointing(capsys):
+    rc = train_main(["--arch", "rwkv6-1.6b", "--smoke", "--steps", "3",
+                     "--batch", "2", "--seq", "16", "--log-every", "1"])
+    assert rc == 0
+    assert "loss" in capsys.readouterr().out
