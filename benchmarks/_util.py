@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
@@ -45,3 +47,23 @@ class Csv:
 
     def header(self) -> None:
         print("benchmark,case,metric,value", flush=True)
+
+
+def write_bench_json(bench: str, rows: list[dict], out_dir: str = ".") -> str:
+    """Emit the standard ``BENCH_<name>.json`` perf-trajectory artifact.
+
+    Shape (schema ``bench.v1``): ``{"benchmark", "schema", "created_unix",
+    "rows": [{"case", "metric", "value"}, ...]}``. Dashboards diff these
+    across PRs; every benchmark that should be tracked writes one.
+    """
+    path = os.path.join(out_dir, f"BENCH_{bench}.json")
+    payload = {
+        "benchmark": bench,
+        "schema": "bench.v1",
+        "created_unix": int(time.time()),
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"# wrote {path}", flush=True)
+    return path

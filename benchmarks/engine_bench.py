@@ -1,0 +1,156 @@
+"""Engine microbenchmarks (this PR's tentpole): scatter vs scatter-free R₀
+assembly, and per-sample vs batched (vmapped) dispatch through `FigaroEngine`.
+
+Two comparisons, both on the paper-style schemas:
+
+  * **assembly**: the pre-refactor emission path scattered every block into a
+    zeroed [M×N] buffer with ``.at[].set`` (O(nodes) dislocated updates on the
+    hot path); the engine assembles R₀ by concatenating column-padded row
+    slabs. Both jitted, same plan, same data — wall-clock ratio is the win.
+  * **dispatch**: serving B feature-sets as B per-sample engine calls vs one
+    vmapped batched dispatch (one launch, one executable).
+
+Emits the standard ``BENCH_engine.json`` (see `_util.write_bench_json`) so the
+perf trajectory tracks this PR onward.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.counts import compute_counts
+from repro.core.engine import FigaroEngine
+from repro.core.figaro import figaro_r0
+from repro.core.heads_tails import segmented_head_tail
+from repro.core.join_tree import build_plan
+from repro.data.relational import favorita_like, yelp_like
+
+from ._util import Csv, timeit, write_bench_json
+
+
+def _scatter_r0(plan, data, *, dtype=jnp.float64):
+    """The pre-refactor assembly: emit blocks into jnp.zeros via .at[].set.
+
+    Kept here (benchmarks only) as the baseline side of the assembly
+    comparison; the library path is scatter-free.
+    """
+    spec = plan.spec
+    data = [jnp.asarray(d, dtype=dtype) for d in data]
+    counts = compute_counts(plan, dtype=dtype)
+    carried_data, carried_scales = {}, {}
+    out_blocks = []
+    row_acc = 0
+
+    def emit(col0, block):
+        nonlocal row_acc
+        out_blocks.append((row_acc, col0, block))
+        row_acc += block.shape[0]
+
+    for idx in reversed(spec.preorder):
+        sp, ix = spec.nodes[idx], plan.index[idx]
+        cnt = counts[idx]
+        x = data[idx]
+        ones = jnp.ones((sp.m,), dtype=dtype)
+        heads, tails, _ = segmented_head_tail(
+            x, ones, jnp.asarray(ix.row_to_group),
+            jnp.asarray(ix.pos_in_group), sp.K)
+        phi_circ_row = cnt["phi_circ"][jnp.asarray(ix.row_to_group)]
+        emit(sp.col_start, tails * jnp.sqrt(phi_circ_row)[:, None])
+        scales = jnp.sqrt(cnt["rpk"])
+        if sp.children:
+            gathered = []
+            for ch, rel0 in zip(sp.children, sp.child_rel_col0):
+                lookup = jnp.asarray(ix.child_lookup[ch])
+                gathered.append((rel0, carried_data.pop(ch)[lookup],
+                                 carried_scales.pop(ch)[lookup]))
+            prod_all = functools.reduce(jnp.multiply,
+                                        [s for _, _, s in gathered])
+            parts = [(0, heads * prod_all[:, None])]
+            for j, (rel0, dj, _) in enumerate(gathered):
+                prod_except = functools.reduce(
+                    jnp.multiply,
+                    [s for k, (_, _, s) in enumerate(gathered) if k != j],
+                    scales)
+                parts.append((rel0, dj * prod_except[:, None]))
+            data_mat = jnp.zeros((sp.K, sp.subtree_width), dtype=dtype)
+            for rel0, block in parts:  # the scatters under benchmark
+                data_mat = data_mat.at[:, rel0:rel0 + block.shape[1]].set(block)
+            scales = scales * prod_all
+        else:
+            data_mat = heads
+        if sp.parent >= 0:
+            gheads, gtails, _ = segmented_head_tail(
+                data_mat, scales, jnp.asarray(ix.group_to_pgroup),
+                jnp.asarray(ix.pos_in_pgroup), sp.P)
+            phi_up_group = cnt["phi_up"][jnp.asarray(ix.group_to_pgroup)]
+            emit(sp.subtree_start, gtails * jnp.sqrt(phi_up_group)[:, None])
+            carried_data[idx] = gheads
+            carried_scales[idx] = jnp.sqrt(cnt["phi_down"])
+        else:
+            emit(sp.subtree_start, data_mat)
+
+    r0 = jnp.zeros((spec.r0_rows, spec.num_cols), dtype=dtype)
+    for row0, col0, block in out_blocks:  # the scatters under benchmark
+        r0 = r0.at[row0:row0 + block.shape[0],
+                   col0:col0 + block.shape[1]].set(block)
+    return r0
+
+
+def run(csv: Csv, *, fast: bool = False) -> None:
+    rows: list[dict] = []
+
+    def add(case, metric, value):
+        csv.add("engine", case, metric, value)
+        rows.append({"case": case, "metric": metric, "value": float(value)})
+
+    schemas = {"favorita": favorita_like(scale=1000 if fast else 4000),
+               "yelp": yelp_like(scale=500 if fast else 2000)}
+    for name, tree in schemas.items():
+        plan = build_plan(tree)
+        data = plan.data
+
+        # -- scatter vs scatter-free assembly (both jitted, plan as arg) ----
+        scatter_fn = jax.jit(lambda p, d: _scatter_r0(p, d))
+        free_fn = jax.jit(lambda p, d: figaro_r0(p, list(d),
+                                                 dtype=jnp.float64))
+        stripped = plan.without_data()
+        np.testing.assert_allclose(  # same R0, bit-for-bit layout
+            np.asarray(scatter_fn(stripped, data)),
+            np.asarray(free_fn(stripped, data)), atol=1e-12)
+        t_scatter = timeit(lambda: scatter_fn(stripped, data))
+        t_free = timeit(lambda: free_fn(stripped, data))
+        add(name, "assembly_scatter_s", t_scatter)
+        add(name, "assembly_scatter_free_s", t_free)
+        add(name, "assembly_speedup", t_scatter / t_free)
+
+        # -- per-sample loop vs batched dispatch ----------------------------
+        engine = FigaroEngine(donate_data=False)
+        b = 4 if fast else 16
+        rng = np.random.default_rng(0)
+        batch = tuple(
+            np.stack([rng.normal(size=np.asarray(d).shape) for _ in range(b)])
+            for d in data)
+        per_sample = lambda: [engine.qr(plan, [d[i] for d in batch],
+                                        dtype=jnp.float64) for i in range(b)]
+        batched = lambda: engine.qr(plan, batch, batched=True,
+                                    dtype=jnp.float64)
+        t_loop = timeit(per_sample)
+        t_batch = timeit(batched)
+        add(name, "dispatch_batch_size", b)
+        add(name, "dispatch_per_sample_s", t_loop)
+        add(name, "dispatch_batched_s", t_batch)
+        add(name, "dispatch_speedup", t_loop / t_batch)
+        add(name, "traces_qr", engine.trace_count("qr"))
+        add(name, "traces_qr_batched", engine.trace_count("qr_batched"))
+
+    write_bench_json("engine", rows)
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c, fast=True)

@@ -14,8 +14,9 @@ import sys
 import time
 import traceback
 
-from . import (accuracy, cartesian_grid, counts_bench, figaro_runtime,
-               join_tree_effect, kernels_bench, lm_roofline, scaling)
+from . import (accuracy, cartesian_grid, counts_bench, engine_bench,
+               figaro_runtime, join_tree_effect, kernels_bench, lm_roofline,
+               scaling)
 from ._util import Csv
 
 BENCHES = {
@@ -27,6 +28,7 @@ BENCHES = {
     "counts": counts_bench.run,              # Algorithm 1 (ours)
     "kernels": kernels_bench.run,            # Pallas layer (ours)
     "lm_roofline": lm_roofline.run,          # §Roofline table (ours)
+    "engine": engine_bench.run,              # compiled engine (this PR)
 }
 
 

@@ -21,8 +21,8 @@ jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import AxisType  # noqa: E402
 
+from repro.compat import AxisType, make_mesh  # noqa: E402
 from repro.core.distributed import (distributed_postprocess_r0,  # noqa: E402
                                     partitioned_figaro_qr)
 from repro.core.figaro import figaro_r0  # noqa: E402
@@ -31,8 +31,8 @@ from repro.core.postprocess import normalize_sign  # noqa: E402
 from repro.data.relational import yelp_like  # noqa: E402
 
 print(f"devices: {len(jax.devices())}")
-mesh = jax.make_mesh((len(jax.devices()),), ("data",),
-                     axis_types=(AxisType.Auto,))
+mesh = make_mesh((len(jax.devices()),), ("data",),
+                 axis_types=(AxisType.Auto,))
 
 tree = yelp_like(scale=400)
 plan = build_plan(tree)

@@ -1,0 +1,79 @@
+"""Version-compat shims for the pinned JAX.
+
+The codebase targets the current jax.sharding surface (``AxisType``,
+``jax.make_mesh(..., axis_types=...)``, top-level ``jax.shard_map``,
+keyword-style ``AbstractMesh``); the container pins an older JAX where those
+spellings differ or don't exist.  Everything version-sensitive is funneled
+through this module so the rest of the tree imports one stable API:
+
+  AxisType             the real enum when available, else a stand-in Enum
+  make_mesh            jax.make_mesh, dropping ``axis_types`` when unsupported
+  make_abstract_mesh   AbstractMesh under both calling conventions
+  shard_map            jax.shard_map or jax.experimental.shard_map.shard_map
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Sequence
+
+import jax
+
+__all__ = ["AxisType", "make_mesh", "make_abstract_mesh", "shard_map",
+           "axis_size"]
+
+
+try:  # jax >= 0.5-ish
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+    _HAS_AXIS_TYPE = True
+except ImportError:  # pinned jax: meshes are implicitly fully-Auto
+    _HAS_AXIS_TYPE = False
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Stand-in for jax.sharding.AxisType (older JAX is all-Auto)."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              axis_types=None, devices=None):
+    """``jax.make_mesh`` that tolerates JAX versions without ``axis_types``."""
+    kwargs = {} if devices is None else {"devices": devices}
+    if _HAS_AXIS_TYPE and axis_types is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=axis_types, **kwargs)
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def make_abstract_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+                       *, axis_types=None):
+    """AbstractMesh across the constructor change: new JAX takes
+    ``(shapes, names, axis_types=...)``, the pinned one ``(((name, size), ...))``."""
+    from jax.sharding import AbstractMesh
+    try:
+        if axis_types is not None:
+            return AbstractMesh(tuple(axis_shapes), tuple(axis_names),
+                                axis_types=axis_types)
+        return AbstractMesh(tuple(axis_shapes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
+
+
+def axis_size(axis_name: str):
+    """``jax.lax.axis_size`` with a psum(1) fallback for JAX versions
+    predating it (inside shard_map/pmap collectives only)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    import jax.numpy as jnp
+    return jax.lax.psum(jnp.ones((), jnp.int32), axis_name)

@@ -7,11 +7,14 @@ from .counts import compute_counts, compute_counts_reference  # noqa: F401
 from .heads_tails import (  # noqa: F401
     head, tail, head_tail, segmented_head_tail, givens_sequence,
 )
-from .figaro import figaro_r0, figaro_r0_fn  # noqa: F401
+from .figaro import figaro_r0, figaro_r0_batched, figaro_r0_fn  # noqa: F401
+from .engine import FigaroEngine, default_engine  # noqa: F401
 from .postprocess import (  # noqa: F401
     householder_qr_r, blocked_qr_r, tsqr_r, postprocess_r0, normalize_sign,
 )
-from .qr import figaro_qr, materialized_qr, givens_qr_r  # noqa: F401
+from .qr import (  # noqa: F401
+    figaro_qr, figaro_qr_batched, materialized_qr, givens_qr_r,
+)
 from .svd import (  # noqa: F401
     svd_over_join, pca_over_join, least_squares_over_join, PCAResult,
 )

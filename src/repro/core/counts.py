@@ -33,39 +33,44 @@ class NodeCounts(dict):
 
 
 def compute_counts(plan: FigaroPlan, dtype=jnp.float32) -> list[NodeCounts]:
-    """Algorithm 1, jitted-friendly. Returns one `NodeCounts` per node index."""
-    nodes = plan.nodes
-    out: list[NodeCounts] = [NodeCounts() for _ in nodes]
+    """Algorithm 1, jitted-friendly. Returns one `NodeCounts` per node index.
+
+    Reads the static sizes off ``plan.spec`` and the (possibly traced) index
+    arrays off ``plan.index``, so it composes with plans passed through jit as
+    pytree arguments.
+    """
+    spec = plan.spec
+    out: list[NodeCounts] = [NodeCounts() for _ in spec.nodes]
 
     # --- PASS 1 (bottom-up): ROWS_PER_KEY, Θ↓, Φ↓ -------------------------
-    for idx in reversed(plan.preorder):
-        nd = nodes[idx]
-        rpk = jnp.asarray(nd.group_count, dtype=dtype)
+    for idx in reversed(spec.preorder):
+        sp, ix = spec.nodes[idx], plan.index[idx]
+        rpk = jnp.asarray(ix.group_count, dtype=dtype)
         theta = rpk
-        for ch in nd.children:
+        for ch in sp.children:
             phi_down_child = out[ch]["phi_down"]  # [P_child]
-            lookup = jnp.asarray(nd.child_lookup[ch])
+            lookup = jnp.asarray(ix.child_lookup[ch])
             theta = theta * phi_down_child[lookup]
         out[idx]["rpk"] = rpk
         out[idx]["theta_down"] = theta
-        if nd.parent >= 0:
+        if sp.parent >= 0:
             out[idx]["phi_down"] = jax.ops.segment_sum(
-                theta, jnp.asarray(nd.group_to_pgroup), num_segments=nd.P)
+                theta, jnp.asarray(ix.group_to_pgroup), num_segments=sp.P)
 
     # --- PASS 2 (top-down): FULL_JOIN_SIZE, Φ↑, Φ° ------------------------
-    for idx in plan.preorder:
-        nd = nodes[idx]
-        if nd.parent >= 0:
+    for idx in spec.preorder:
+        sp, ix = spec.nodes[idx], plan.index[idx]
+        if sp.parent >= 0:
             up = out[idx]["phi_up"]  # set by the parent below
-            full = out[idx]["theta_down"] * up[jnp.asarray(nd.group_to_pgroup)]
+            full = out[idx]["theta_down"] * up[jnp.asarray(ix.group_to_pgroup)]
         else:
             full = out[idx]["theta_down"]
         out[idx]["full"] = full
         out[idx]["phi_circ"] = full / out[idx]["rpk"]
-        for ch in nd.children:
-            lookup = jnp.asarray(nd.child_lookup[ch])
+        for ch in sp.children:
+            lookup = jnp.asarray(ix.child_lookup[ch])
             full_ij = jax.ops.segment_sum(full, lookup,
-                                          num_segments=nodes[ch].P)
+                                          num_segments=spec.nodes[ch].P)
             out[ch]["phi_up"] = full_ij / out[ch]["phi_down"]
 
     return out

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 from .figaro import figaro_r0
 from .join_tree import JoinTree, build_plan
 from .postprocess import blocked_qr_r, householder_qr_r, normalize_sign, tsqr_r
@@ -89,7 +91,7 @@ def distributed_postprocess_r0(
         r_local = local_qr(block)
         return butterfly_qr_combine(r_local, axis, p, leaf_qr=householder_qr_r)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=P(axis, None),
         out_specs=P(axis, None),  # each shard returns its (identical) R
@@ -159,17 +161,22 @@ def partitioned_figaro_qr(
     dtype=jnp.float64,
     method: str = "tsqr",
     use_kernel: bool = False,
+    engine=None,
 ) -> jnp.ndarray:
     """FiGaRo over ``num_parts`` fact partitions + TSQR combine.
 
     Per-partition programs are independent (different static shapes — in
     production each runs on its own pod); the combine stacks the partial R
-    factors and re-triangularizes.
+    factors and re-triangularizes. Each partition dispatches through the
+    shared `FigaroEngine`, whose executable cache keys on the partition's plan
+    signature — repeat calls (elastic re-dispatch, refreshed data) reuse the
+    compiled programs instead of re-tracing per call.
     """
-    from .qr import figaro_qr
+    from .engine import default_engine
 
+    engine = engine if engine is not None else default_engine()
     parts = partition_fact_table(tree, num_parts)
-    rs = [figaro_qr(build_plan(t), dtype=dtype, method=method,
+    rs = [engine.qr(build_plan(t), dtype=dtype, method=method,
                     use_kernel=use_kernel) for t in parts]
     stacked = jnp.concatenate(rs, axis=0)
     return normalize_sign(tsqr_r(stacked, leaf_rows=max(

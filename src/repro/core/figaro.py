@@ -17,9 +17,19 @@ The result ``R₀`` is almost upper-triangular with at most M non-zero rows and
 satisfies ``A[:, Ȳ] = Q·[R₀; 0]`` for orthogonal Q (Theorem 6.1) — equivalently
 ``R₀ᵀR₀ == AᵀA``, the invariant the tests enforce.
 
-All row/segment bookkeeping is static (from the `FigaroPlan`), so this function
-jits; every node's transform is independent per key block, which is exactly the
-paper's parallelism — on TPU it vectorizes instead of threading.
+Execution model (post plan-split): the `FigaroPlan` is a pytree — its static
+`PlanSpec` (shapes, topology, R₀ row/column layout) is treedef metadata and the
+`NodeIndex` arrays are leaves — so this function jits **with the plan as an
+argument**. One compiled executable serves every plan with the same signature;
+`repro.core.engine.FigaroEngine` owns that cache and the batched (vmapped)
+dispatch over a leading data axis.
+
+R₀ assembly is scatter-free: the (row, col) layout of every emitted block is
+precomputed in `join_tree.build_plan` (``tail_row0``/``out_row0``), so R₀ is
+the concatenation of column-padded row slabs in emission order — no
+``zeros().at[].set`` scatters on the hot path, and the carried `Data` matrix of
+an inner node is likewise a pure concatenation (its child blocks are
+column-contiguous by the preorder layout).
 """
 
 from __future__ import annotations
@@ -34,7 +44,12 @@ from .counts import compute_counts
 from .heads_tails import segmented_head_tail
 from .join_tree import FigaroPlan
 
-__all__ = ["figaro_r0", "figaro_r0_fn"]
+__all__ = ["figaro_r0", "figaro_r0_batched", "figaro_r0_fn"]
+
+
+def _pad_cols(block: jnp.ndarray, col0: int, num_cols: int) -> jnp.ndarray:
+    """Embed ``block`` into columns [col0, col0+w) of an all-zero [rows, N] slab."""
+    return jnp.pad(block, ((0, 0), (col0, num_cols - col0 - block.shape[1])))
 
 
 def figaro_r0(
@@ -49,86 +64,99 @@ def figaro_r0(
     ``data[i]`` overrides node i's data matrix (same row order as the plan) —
     used for jit arguments and for propagating gradients through FiGaRo.
     """
-    nodes = plan.nodes
+    spec = plan.spec
     if data is None:
-        data = [jnp.asarray(nd.data, dtype=dtype) for nd in nodes]
-    else:
-        data = [jnp.asarray(d, dtype=dtype) for d in data]
+        data = plan.data
+    data = [jnp.asarray(d, dtype=dtype) for d in data]
     counts = compute_counts(plan, dtype=dtype)
 
     # Carried state per node (filled children-first).
     carried_data: dict[int, jnp.ndarray] = {}
     carried_scales: dict[int, jnp.ndarray] = {}
-    out_blocks: list[tuple[int, int, jnp.ndarray]] = []  # (row0, col0, block)
-    row_acc = 0
+    slabs: list[jnp.ndarray] = []  # column-padded row blocks, emission order
 
     def emit(col0: int, block: jnp.ndarray) -> None:
-        nonlocal row_acc
-        out_blocks.append((row_acc, col0, block))
-        row_acc += block.shape[0]
+        slabs.append(_pad_cols(block, col0, spec.num_cols))
 
-    for idx in reversed(plan.preorder):  # children strictly before parents
-        nd = nodes[idx]
+    for idx in reversed(spec.preorder):  # children strictly before parents
+        sp = spec.nodes[idx]
+        ix = plan.index[idx]
         cnt = counts[idx]
         x = data[idx]
 
         # --- HEADS_AND_TAILS (lines 11-16) --------------------------------
-        ones = jnp.ones((nd.m,), dtype=dtype)
+        ones = jnp.ones((sp.m,), dtype=dtype)
         heads, tails, _ = segmented_head_tail(
-            x, ones, jnp.asarray(nd.row_to_group), jnp.asarray(nd.pos_in_group),
-            nd.K, use_kernel=use_kernel)
-        phi_circ_row = cnt["phi_circ"][jnp.asarray(nd.row_to_group)]
-        emit(nd.col_start, tails * jnp.sqrt(phi_circ_row)[:, None])
+            x, ones, jnp.asarray(ix.row_to_group), jnp.asarray(ix.pos_in_group),
+            sp.K, use_kernel=use_kernel)
+        phi_circ_row = cnt["phi_circ"][jnp.asarray(ix.row_to_group)]
+        emit(sp.col_start, tails * jnp.sqrt(phi_circ_row)[:, None])
 
         scales = jnp.sqrt(cnt["rpk"])  # √|S_i^x̄|, one per key
-        width = nd.subtree_width
         # --- PROCESS_AND_JOIN_CHILDREN (lines 17-26) ----------------------
-        if nd.children:
-            gathered = []  # (rel_col0, data [K, w_ch], scale [K])
-            for ch in nd.children:
-                lookup = jnp.asarray(nd.child_lookup[ch])
-                gathered.append((
-                    nodes[ch].subtree_start - nd.subtree_start,
-                    carried_data.pop(ch)[lookup],
-                    carried_scales.pop(ch)[lookup],
-                ))
-            prod_all = functools.reduce(jnp.multiply, [s for _, _, s in gathered])
-            parts = [(0, heads * prod_all[:, None])]
-            for j, (rel0, dj, sj) in enumerate(gathered):
+        if sp.children:
+            gathered = []  # (data [K, w_ch], scale [K]) in child (column) order
+            for ch in sp.children:
+                lookup = jnp.asarray(ix.child_lookup[ch])
+                gathered.append((carried_data.pop(ch)[lookup],
+                                 carried_scales.pop(ch)[lookup]))
+            prod_all = functools.reduce(jnp.multiply, [s for _, s in gathered])
+            blocks = [heads * prod_all[:, None]]
+            for j, (dj, _) in enumerate(gathered):
                 prod_except = functools.reduce(
                     jnp.multiply,
-                    [s for k, (_, _, s) in enumerate(gathered) if k != j],
+                    [s for k, (_, s) in enumerate(gathered) if k != j],
                     scales)  # scales = √rpk_i  (line 24's `scales[x̄_i]` factor)
-                parts.append((rel0, dj * prod_except[:, None]))
-            data_mat = jnp.zeros((nd.K, width), dtype=dtype)
-            for rel0, block in parts:
-                data_mat = data_mat.at[:, rel0:rel0 + block.shape[1]].set(block)
+                blocks.append(dj * prod_except[:, None])
+            # Children subtrees are column-contiguous after the node's own
+            # columns (validated at plan build) — Data is a pure concat.
+            data_mat = jnp.concatenate(blocks, axis=1)
             scales = scales * prod_all  # line 26
         else:
             data_mat = heads  # width == n for a leaf
 
         # --- PROJECT_AWAY_JOIN_ATTRIBUTES (lines 27-34) / root (lines 7-8) -
-        if nd.parent >= 0:
+        if sp.parent >= 0:
             gheads, gtails, _ = segmented_head_tail(
-                data_mat, scales, jnp.asarray(nd.group_to_pgroup),
-                jnp.asarray(nd.pos_in_pgroup), nd.P, use_kernel=use_kernel)
-            phi_up_group = cnt["phi_up"][jnp.asarray(nd.group_to_pgroup)]
-            emit(nd.subtree_start, gtails * jnp.sqrt(phi_up_group)[:, None])
+                data_mat, scales, jnp.asarray(ix.group_to_pgroup),
+                jnp.asarray(ix.pos_in_pgroup), sp.P, use_kernel=use_kernel)
+            phi_up_group = cnt["phi_up"][jnp.asarray(ix.group_to_pgroup)]
+            emit(sp.subtree_start, gtails * jnp.sqrt(phi_up_group)[:, None])
             carried_data[idx] = gheads
             carried_scales[idx] = jnp.sqrt(cnt["phi_down"])
         else:
-            emit(nd.subtree_start, data_mat)
+            emit(sp.subtree_start, data_mat)
 
-    assert row_acc == plan.r0_rows, (row_acc, plan.r0_rows)
-    r0 = jnp.zeros((plan.r0_rows, plan.num_cols), dtype=dtype)
-    for row0, col0, block in out_blocks:
-        r0 = r0.at[row0:row0 + block.shape[0],
-                   col0:col0 + block.shape[1]].set(block)
+    r0 = jnp.concatenate(slabs, axis=0)
+    assert r0.shape[0] == spec.r0_rows, (r0.shape, spec.r0_rows)
     return r0
 
 
+def figaro_r0_batched(
+    plan: FigaroPlan,
+    data_batch: Sequence[jnp.ndarray],
+    *,
+    dtype=jnp.float32,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """Algorithm 2 vmapped over a leading batch axis of the data matrices.
+
+    ``data_batch[i]`` is [B, m_i, n_i]; the plan (and therefore the counts,
+    which depend only on the index structure) is held fixed across the batch —
+    one join structure serving B feature-sets per dispatch. Returns
+    [B, r0_rows, num_cols].
+    """
+    fn = functools.partial(figaro_r0, plan, dtype=dtype, use_kernel=use_kernel)
+    return jax.vmap(lambda d: fn(list(d)))(tuple(data_batch))
+
+
 def figaro_r0_fn(plan: FigaroPlan, *, dtype=jnp.float32, use_kernel: bool = False):
-    """A jittable closure ``data_list -> R₀`` for a fixed plan."""
+    """A jittable closure ``data_list -> R₀`` for a fixed plan.
+
+    Kept for the pre-engine call sites; new code should go through
+    `repro.core.engine.FigaroEngine`, which passes the plan through jit as a
+    pytree argument and shares one executable across same-signature plans.
+    """
 
     def fn(data: Sequence[jnp.ndarray]) -> jnp.ndarray:
         return figaro_r0(plan, data, dtype=dtype, use_kernel=use_kernel)

@@ -1,15 +1,33 @@
-"""Join trees and the FiGaRo execution plan (structural index, built at ingest).
+"""Join trees and the FiGaRo execution plan, split static/dynamic for jit.
 
 A `JoinTree` fixes the evaluation order of the acyclic natural join (paper §2).
-`build_plan` compiles the database + tree into a `FigaroPlan`: per-node group
-structure (segments by full join key ``X̄_i`` and by the parent-shared key
-``X̄_p``), child lookup maps, and the global column layout. All shapes in the
-plan are static, so the numeric passes (`counts.py`, `figaro.py`) jit cleanly.
+`build_plan` compiles the database + tree into a `FigaroPlan`, which is split
+into the two halves a compiled execution engine needs:
+
+  * `PlanSpec` / `NodeSpec` — the **static** half: shapes, tree topology,
+    column layout, and the R₀ row layout (where every node's tail block and
+    generalized-tail block lands). All Python ints/tuples, hashable; it is the
+    pytree *treedef* of a plan, so two plans with equal specs hit the same
+    compiled executable.
+  * `NodeIndex` — the **dynamic** half: per-node segment/group index arrays
+    and child lookup tables. These are pytree *leaves*, so a `FigaroPlan`
+    passes straight **through** `jax.jit` as an argument — no per-plan closure
+    rebuild, one compilation per plan signature (see `repro.core.engine`).
+
+`FigaroPlan` itself is a registered dataclass pytree `(spec, index, data)`;
+`plan.nodes` still yields the merged per-node `NodePlan` views the rest of the
+repo (benchmarks, examples, tests) reads fields off.
 
 Terminology matches the paper: for node ``i``, ``X̄_i`` = all join attributes of
 ``S_i``; ``X̄_p`` = join attributes shared with the parent (empty for the root or
 for Cartesian edges); ``X̄_ij`` = attributes shared with child ``j`` (== child's
 ``X̄_p``).
+
+R₀ row layout: Algorithm 2 emits, per node in reversed preorder, first the
+``m_i`` scaled-tail rows (at column ``col_start``) and then the ``K_i``
+generalized-tail rows (root: head rows) at column ``subtree_start``. The
+offsets are precomputed here (``tail_row0`` / ``out_row0``) so `figaro_r0`
+assembles R₀ scatter-free by concatenating padded row slabs in layout order.
 """
 
 from __future__ import annotations
@@ -17,11 +35,20 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+import jax
 import numpy as np
 
 from .relation import Database, Relation
 
-__all__ = ["JoinTree", "NodePlan", "FigaroPlan", "build_plan"]
+__all__ = [
+    "JoinTree",
+    "NodeSpec",
+    "NodeIndex",
+    "PlanSpec",
+    "NodePlan",
+    "FigaroPlan",
+    "build_plan",
+]
 
 
 @dataclasses.dataclass
@@ -142,17 +169,41 @@ def _codes(rel: Relation, attrs: Sequence[str], cards: dict[str, int]) -> np.nda
     return code
 
 
-@dataclasses.dataclass
-class NodePlan:
+@dataclasses.dataclass(frozen=True)
+class NodeSpec:
+    """Static, hashable per-node metadata — part of the plan's treedef."""
+
     name: str
     idx: int
     parent: int  # -1 for root
-    children: list[int]
+    children: tuple[int, ...]
     # Static sizes.
     m: int  # rows
     n: int  # data columns
     K: int  # distinct full join keys X̄_i
     P: int  # distinct parent-shared keys X̄_p (1 for root / Cartesian edge)
+    # Column layout (global, preorder => subtree columns contiguous).
+    col_start: int
+    subtree_start: int
+    subtree_width: int
+    # Column offsets of each child's subtree block inside this node's carried
+    # Data matrix (aligned with `children`; block 0 = own cols is implicit).
+    child_rel_col0: tuple[int, ...]
+    # R₀ row layout (emission order: reversed preorder, tails then gen-tails).
+    tail_row0: int  # first row of the m scaled-tail rows
+    out_row0: int  # first row of the K gen-tail (root: head) rows
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class NodeIndex:
+    """Dynamic per-node index arrays — pytree leaves, device-resident under jit.
+
+    Built as numpy int32 at ingest; they cross the jit boundary as arguments,
+    so gathers/segment-reductions trace against them without recompilation
+    when only their *values* change (same-shape plan => cache hit).
+    """
+
     # Row-level structure (all [m]).
     row_to_group: np.ndarray
     row_seg_start: np.ndarray  # first row index of the row's group
@@ -166,34 +217,136 @@ class NodePlan:
     pgroup_count: np.ndarray  # [P] (# groups per pgroup)
     # Child lookups: child idx -> [K] index into that child's P-table.
     child_lookup: dict[int, np.ndarray]
-    # Column layout (global, preorder => subtree columns contiguous).
-    col_start: int
-    subtree_start: int
-    subtree_width: int
-    # The node's sorted numeric data.
-    data: np.ndarray  # [m, n] float
 
 
-@dataclasses.dataclass
-class FigaroPlan:
-    nodes: list[NodePlan]  # indexed by node idx
-    preorder: list[int]
+@dataclasses.dataclass(frozen=True)
+class PlanSpec:
+    """Static, hashable whole-plan metadata (the compilation signature)."""
+
+    nodes: tuple[NodeSpec, ...]
+    preorder: tuple[int, ...]
     root: int
     num_cols: int  # N = total data columns
     total_rows: int  # M = sum of m_i
     r0_rows: int  # rows of the (padded) almost-upper-triangular R0
-    names: list[str]
+    names: tuple[str, ...]
+
+
+@dataclasses.dataclass
+class NodePlan:
+    """Merged per-node view (spec + index + data) — the pre-split interface
+    that benchmarks/examples/tests keep reading fields off."""
+
+    name: str
+    idx: int
+    parent: int
+    children: list[int]
+    m: int
+    n: int
+    K: int
+    P: int
+    row_to_group: np.ndarray
+    row_seg_start: np.ndarray
+    pos_in_group: np.ndarray
+    group_start: np.ndarray
+    group_count: np.ndarray
+    group_to_pgroup: np.ndarray
+    group_seg_start: np.ndarray
+    pos_in_pgroup: np.ndarray
+    pgroup_count: np.ndarray
+    child_lookup: dict[int, np.ndarray]
+    col_start: int
+    subtree_start: int
+    subtree_width: int
+    data: np.ndarray  # [m, n] float
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FigaroPlan:
+    """(static spec, dynamic index, data) — a pytree that crosses jit whole.
+
+    ``spec`` is metadata (hashable, part of the treedef); ``index`` and
+    ``data`` are leaves. Passing a plan as a jit *argument* therefore keys the
+    executable cache on the spec + array shapes only — new databases with the
+    same shape re-use the compiled program.
+    """
+
+    index: tuple[NodeIndex, ...]
+    data: tuple[np.ndarray, ...]  # per-node [m_i, n_i], preorder-indexed
+    spec: PlanSpec = dataclasses.field(metadata=dict(static=True))
+
+    # -- pre-split compatibility surface ------------------------------------
+    @property
+    def nodes(self) -> list[NodePlan]:
+        return [
+            NodePlan(
+                name=sp.name, idx=sp.idx, parent=sp.parent,
+                children=list(sp.children), m=sp.m, n=sp.n, K=sp.K, P=sp.P,
+                row_to_group=ix.row_to_group, row_seg_start=ix.row_seg_start,
+                pos_in_group=ix.pos_in_group, group_start=ix.group_start,
+                group_count=ix.group_count,
+                group_to_pgroup=ix.group_to_pgroup,
+                group_seg_start=ix.group_seg_start,
+                pos_in_pgroup=ix.pos_in_pgroup, pgroup_count=ix.pgroup_count,
+                child_lookup=ix.child_lookup, col_start=sp.col_start,
+                subtree_start=sp.subtree_start,
+                subtree_width=sp.subtree_width,
+                data=d,
+            )
+            for sp, ix, d in zip(self.spec.nodes, self.index,
+                                 self.data if self.data else
+                                 (None,) * len(self.spec.nodes))
+        ]
+
+    @property
+    def preorder(self) -> tuple[int, ...]:
+        return self.spec.preorder
+
+    @property
+    def root(self) -> int:
+        return self.spec.root
+
+    @property
+    def num_cols(self) -> int:
+        return self.spec.num_cols
+
+    @property
+    def total_rows(self) -> int:
+        return self.spec.total_rows
+
+    @property
+    def r0_rows(self) -> int:
+        return self.spec.r0_rows
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return self.spec.names
 
     def node_by_name(self, name: str) -> NodePlan:
-        return self.nodes[self.names.index(name)]
+        return self.nodes[self.spec.names.index(name)]
+
+    def with_data(self, data) -> "FigaroPlan":
+        """Same plan over new per-node data matrices (shapes must match)."""
+        data = tuple(data)
+        for sp, d in zip(self.spec.nodes, data):
+            if tuple(d.shape[-2:]) != (sp.m, sp.n):
+                raise ValueError(
+                    f"{sp.name}: data shape {d.shape} != plan ({sp.m}, {sp.n})")
+        return dataclasses.replace(self, data=data)
+
+    def without_data(self) -> "FigaroPlan":
+        """Strip the data leaves (the engine passes data as its own argument,
+        so donation can target data buffers without touching the index)."""
+        return dataclasses.replace(self, data=())
 
 
 def build_plan(tree: JoinTree, dtype=np.float64) -> FigaroPlan:
     """Compile (database, join tree) into a FigaroPlan.
 
     Sorts every relation with the parent-shared attributes major (paper §5
-    assumption), derives segment structure, child lookup tables, and the global
-    preorder column layout.
+    assumption), derives segment structure, child lookup tables, the global
+    preorder column layout, and the static R₀ row layout.
     """
     db = tree.db
     order = tree.preorder()
@@ -217,8 +370,6 @@ def build_plan(tree: JoinTree, dtype=np.float64) -> FigaroPlan:
     def subtree_cols(nme: str) -> int:
         return db[nme].num_data_cols + sum(subtree_cols(c) for c in tree.children[nme])
 
-    nodes: list[NodePlan] = [None] * len(order)  # type: ignore
-
     # First pass: sort relations and build per-node group structure.
     sorted_rels: dict[str, Relation] = {}
     pkey_attrs: dict[str, tuple[str, ...]] = {}
@@ -235,6 +386,10 @@ def build_plan(tree: JoinTree, dtype=np.float64) -> FigaroPlan:
         rel = sorted_rels[nme]
         pcodes = _codes(rel, pkey_attrs[nme], cards)
         pcode_table[nme] = np.unique(pcodes)  # sorted
+
+    specs: list[NodeSpec] = [None] * len(order)  # type: ignore
+    index: list[NodeIndex] = [None] * len(order)  # type: ignore
+    data: list[np.ndarray] = [None] * len(order)  # type: ignore
 
     for nme in order:
         rel = sorted_rels[nme]
@@ -275,15 +430,37 @@ def build_plan(tree: JoinTree, dtype=np.float64) -> FigaroPlan:
                     "run relation.full_reduce first")
             child_lookup[name_to_idx[ch]] = pos.astype(np.int32)
 
-        nodes[name_to_idx[nme]] = NodePlan(
+        # Carried-Data column layout: own cols first, then each child subtree;
+        # preorder makes the blocks contiguous — asserted so the engine can
+        # assemble by concatenation alone.
+        child_idxs = tuple(name_to_idx[c] for c in tree.children[nme])
+        rel_col0 = []
+        cursor = db[nme].num_data_cols
+        for c in tree.children[nme]:
+            r0c = col_start[c] - col_start[nme]
+            assert r0c == cursor, (nme, c, r0c, cursor)
+            rel_col0.append(r0c)
+            cursor += subtree_cols(c)
+        assert cursor == subtree_cols(nme)
+
+        i = name_to_idx[nme]
+        specs[i] = NodeSpec(
             name=nme,
-            idx=name_to_idx[nme],
+            idx=i,
             parent=-1 if par is None else name_to_idx[par],
-            children=[name_to_idx[c] for c in tree.children[nme]],
+            children=child_idxs,
             m=rel.num_rows,
             n=rel.num_data_cols,
             K=K,
             P=int(pcode_table[nme].shape[0]),
+            col_start=col_start[nme],
+            subtree_start=col_start[nme],
+            subtree_width=subtree_cols(nme),
+            child_rel_col0=tuple(rel_col0),
+            tail_row0=-1,  # filled below once all K/m are known
+            out_row0=-1,
+        )
+        index[i] = NodeIndex(
             row_to_group=row_to_group,
             row_seg_start=row_seg_start.astype(np.int32),
             pos_in_group=pos_in_group,
@@ -294,36 +471,38 @@ def build_plan(tree: JoinTree, dtype=np.float64) -> FigaroPlan:
             pos_in_pgroup=pos_in_pgroup,
             pgroup_count=pg_count,
             child_lookup=child_lookup,
-            col_start=col_start[nme],
-            subtree_start=col_start[nme],
-            subtree_width=subtree_cols(nme),
-            data=np.asarray(rel.data, dtype=dtype),
         )
+        data[i] = np.asarray(rel.data, dtype=dtype)
 
     # Reverse-lookup sanity: child P-table == child's distinct X̄_p codes, and
     # the parent must cover all of them (full reduction the other way).
     for nme in order:
         for ch in tree.children[nme]:
-            child = nodes[name_to_idx[ch]]
-            lookup = nodes[name_to_idx[nme]].child_lookup[child.idx]
+            ci = name_to_idx[ch]
+            lookup = index[name_to_idx[nme]].child_lookup[ci]
             covered = np.unique(lookup)
-            if covered.shape[0] != child.P:
+            if covered.shape[0] != specs[ci].P:
                 raise ValueError(
                     f"dangling keys in {ch} (not matched by {nme}); run full_reduce")
 
-    total_rows = sum(nd.m for nd in nodes)
-    # R0 rows: per node its m tail rows; for non-root nodes K generalized-tail
-    # rows; for the root K data (head) rows.
-    r0_rows = sum(nd.m for nd in nodes)
-    r0_rows += sum(nd.K for nd in nodes if nd.parent >= 0)
-    r0_rows += nodes[name_to_idx[tree.root]].K
+    # R₀ row layout, in emission order (reversed preorder; per node the m tail
+    # rows then the K generalized-tail rows — for the root, K head rows).
+    preorder = tuple(name_to_idx[n] for n in order)
+    row_acc = 0
+    for i in reversed(preorder):
+        sp = specs[i]
+        specs[i] = dataclasses.replace(sp, tail_row0=row_acc,
+                                       out_row0=row_acc + sp.m)
+        row_acc += sp.m + sp.K
 
-    return FigaroPlan(
-        nodes=nodes,
-        preorder=[name_to_idx[n] for n in order],
+    total_rows = sum(sp.m for sp in specs)
+    spec = PlanSpec(
+        nodes=tuple(specs),
+        preorder=preorder,
         root=name_to_idx[tree.root],
         num_cols=num_cols,
         total_rows=total_rows,
-        r0_rows=r0_rows,
-        names=order,
+        r0_rows=row_acc,
+        names=tuple(order),
     )
+    return FigaroPlan(spec=spec, index=tuple(index), data=tuple(data))

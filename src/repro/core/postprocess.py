@@ -33,9 +33,14 @@ __all__ = [
 
 
 def normalize_sign(r: jnp.ndarray) -> jnp.ndarray:
-    """Flip row signs so diag(R) >= 0 (QR uniqueness normalization)."""
+    """Flip row signs so diag(R) >= 0 (QR uniqueness normalization).
+
+    Sign vector is built in ``r.dtype`` — a Python-float fill would promote
+    low-precision inputs (bf16/f16 serving) and silently upcast the result.
+    """
+    r = jnp.asarray(r)
     s = jnp.sign(jnp.diagonal(r))
-    s = jnp.where(s == 0, 1.0, s).astype(r.dtype)
+    s = jnp.where(s == 0, jnp.ones((), r.dtype), s).astype(r.dtype)
     return r * s[:, None]
 
 

@@ -1,23 +1,27 @@
 """Public QR APIs: FiGaRo end-to-end and materialized-join baselines.
 
 `figaro_qr` is the paper's pipeline: plan → counts → Algorithm 2 → post-process.
-`materialized_qr` / `givens_qr_r` are the baselines the paper benchmarks
-against (LAPACK Householder on the join output / textbook Givens rotations).
+`figaro_qr_batched` is the serving form — one compiled dispatch factorizes B
+feature-sets over the same join structure. Both route through the shared
+`FigaroEngine` (`repro.core.engine`), so repeat calls with same-signature
+plans hit cached executables. `materialized_qr` / `givens_qr_r` are the
+baselines the paper benchmarks against (LAPACK Householder on the join
+output / textbook Givens rotations).
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .figaro import figaro_r0
-from .join_tree import FigaroPlan, JoinTree, build_plan
+from .engine import default_engine, plan_for
+from .join_tree import FigaroPlan, JoinTree
 from .materialize import materialize_join
-from .postprocess import householder_qr_r, normalize_sign, postprocess_r0
+from .postprocess import householder_qr_r, normalize_sign
 
 __all__ = [
     "figaro_qr",
+    "figaro_qr_batched",
     "figaro_qr_fn",
     "materialized_qr",
     "givens_qr_r",
@@ -35,21 +39,41 @@ def figaro_qr(
     use_kernel: bool = False,
 ) -> jnp.ndarray:
     """Upper-triangular R of the QR decomposition of the (unmaterialized) join."""
-    plan = tree_or_plan if isinstance(tree_or_plan, FigaroPlan) else \
-        build_plan(tree_or_plan)
-    r0 = figaro_r0(plan, data, dtype=dtype, use_kernel=use_kernel)
-    return postprocess_r0(r0, method=method, leaf_rows=leaf_rows,
-                          use_kernel=use_kernel)
+    plan = plan_for(tree_or_plan)
+    return default_engine().qr(plan, data, dtype=dtype, method=method,
+                               leaf_rows=leaf_rows, use_kernel=use_kernel)
+
+
+def figaro_qr_batched(
+    tree_or_plan: JoinTree | FigaroPlan,
+    data_batch,
+    *,
+    dtype=jnp.float32,
+    method: str = "tsqr",
+    leaf_rows: int = 256,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """R for a batch of feature-sets over one join structure: ``data_batch[i]``
+    is [B, m_i, n_i]; returns [B, N, N] from a single compiled dispatch."""
+    plan = plan_for(tree_or_plan)
+    return default_engine().qr(plan, data_batch, batched=True, dtype=dtype,
+                               method=method, leaf_rows=leaf_rows,
+                               use_kernel=use_kernel)
 
 
 def figaro_qr_fn(plan: FigaroPlan, *, dtype=jnp.float32,
                  method: str = "tsqr", leaf_rows: int = 256,
                  use_kernel: bool = False):
-    """Jitted end-to-end closure ``data_list -> R`` for a fixed plan.
+    """A jitted closure ``data_list -> R`` for a fixed plan.
 
-    One compiled program for counts + Algorithm 2 + post-processing — the
-    deployment form (and what wall-clock benchmarks time, compile excluded).
+    One compiled program for counts + Algorithm 2 + post-processing, with the
+    plan *closed over* so each call dispatches on the data buffers alone —
+    the minimum-overhead form wall-clock benchmarks time (compile excluded).
+    For plan-generic dispatch (one executable shared across same-signature
+    plans, batching, donation) use `FigaroEngine` / `figaro_qr` instead.
     """
+    from .figaro import figaro_r0
+    from .postprocess import postprocess_r0
 
     def fn(data):
         r0 = figaro_r0(plan, data, dtype=dtype, use_kernel=use_kernel)

@@ -4,18 +4,19 @@ A = Q·R  ⇒  singular values of A == singular values of R; right-singular
 vectors of A == those of R; RᵀR is the Cholesky factorization of AᵀA; the
 least-squares solution against a label column is back-substitution on the R of
 the label-extended matrix. None of it touches the join output.
+
+All entry points route through the shared `FigaroEngine`: one compiled
+executable per plan signature covers plan → counts → rotations → post-process
+→ downstream read, and `batched=True` serves a leading batch axis of
+feature-sets per dispatch.
 """
 
 from __future__ import annotations
 
-import dataclasses
-
-import jax
 import jax.numpy as jnp
 
-from .counts import compute_counts
-from .join_tree import FigaroPlan, JoinTree, build_plan
-from .qr import figaro_qr
+from .engine import PCAResult, default_engine, plan_for
+from .join_tree import FigaroPlan
 
 __all__ = [
     "svd_over_join",
@@ -26,69 +27,45 @@ __all__ = [
 ]
 
 
-def svd_over_join(tree_or_plan, *, dtype=jnp.float64, **qr_kwargs):
+def svd_over_join(tree_or_plan, data=None, *, batched: bool = False,
+                  dtype=jnp.float64, **qr_kwargs):
     """Singular values and right-singular vectors of the join matrix.
 
     Returns (s [N], Vt [N, N]); the implicit U is A·V·diag(1/s) (never built).
+    With ``batched=True`` and [B, m_i, n_i] data leaves: (s [B, N], Vt [B, N, N]).
     """
-    r = figaro_qr(tree_or_plan, dtype=dtype, **qr_kwargs)
-    _, s, vt = jnp.linalg.svd(r)
-    return s, vt
+    plan = plan_for(tree_or_plan)
+    return default_engine().svd(plan, data, batched=batched, dtype=dtype,
+                                **qr_kwargs)
 
 
-@dataclasses.dataclass
-class PCAResult:
-    components: jnp.ndarray  # [k, N] principal directions (rows)
-    explained_variance: jnp.ndarray  # [k]
-    mean: jnp.ndarray  # [N] column means over the join
-    num_rows: jnp.ndarray  # scalar: |join|
-
-
-def join_column_moments(plan: FigaroPlan, *, dtype=jnp.float64):
+def join_column_moments(plan: FigaroPlan, data=None, *, dtype=jnp.float64):
     """Factorized column sums & row count of the join (no materialization).
 
     Row r of relation i appears in exactly Φ°_i(key(r)) join rows, so
     Σ_join A[:, Y_i] = Σ_r data_i[r] · Φ°_i(key(r)) — a per-node weighted sum.
     """
-    counts = compute_counts(plan, dtype=dtype)
-    n = plan.num_cols
-    sums = jnp.zeros((n,), dtype)
-    for nd in plan.nodes:
-        if nd.n == 0:
-            continue
-        w = counts[nd.idx]["phi_circ"][jnp.asarray(nd.row_to_group)]
-        s = w @ jnp.asarray(nd.data, dtype)
-        sums = sums.at[nd.col_start:nd.col_start + nd.n].add(s)
-    total = counts[plan.root]["full"].sum()
-    return sums, total
+    from .engine import _column_moments
+
+    if data is None:
+        data = plan.data
+    return _column_moments(plan, data, dtype)
 
 
-def pca_over_join(tree_or_plan, k: int | None = None, *, center: bool = True,
-                  dtype=jnp.float64, **qr_kwargs) -> PCAResult:
+def pca_over_join(tree_or_plan, k: int | None = None, *, data=None,
+                  center: bool = True, dtype=jnp.float64,
+                  **qr_kwargs) -> PCAResult:
     """PCA of the join matrix from R (+ factorized means when centering).
 
     cov = (AᵀA − J·μμᵀ)/(J−1) = (RᵀR − J·μμᵀ)/(J−1); eigendecomposition of an
     N×N matrix — independent of the join size.
     """
-    plan = tree_or_plan if isinstance(tree_or_plan, FigaroPlan) else \
-        build_plan(tree_or_plan)
-    r = figaro_qr(plan, dtype=dtype, **qr_kwargs)
-    n = plan.num_cols
-    k = n if k is None else min(k, n)
-    sums, total = join_column_moments(plan, dtype=dtype)
-    mean = sums / total
-    gram = r.T @ r
-    if center:
-        gram = gram - total * jnp.outer(mean, mean)
-    cov = gram / jnp.maximum(total - 1.0, 1.0)
-    evals, evecs = jnp.linalg.eigh(cov)  # ascending
-    order = jnp.argsort(-evals)[:k]
-    return PCAResult(components=evecs[:, order].T,
-                     explained_variance=evals[order],
-                     mean=mean, num_rows=total)
+    plan = plan_for(tree_or_plan)
+    return default_engine().pca(plan, data, k=k, center=center, dtype=dtype,
+                                **qr_kwargs)
 
 
-def least_squares_over_join(tree_or_plan, label_col: int, *,
+def least_squares_over_join(tree_or_plan, label_col: int, *, data=None,
                             ridge: float = 0.0, dtype=jnp.float64,
                             **qr_kwargs):
     """argmin_β ‖A[:, feats]·β − A[:, label]‖² over the (unmaterialized) join.
@@ -99,21 +76,6 @@ def least_squares_over_join(tree_or_plan, label_col: int, *,
     Returns (beta [N-1], residual_norm) — the closed-form linear-regression
     training the paper cites as the driving ML application.
     """
-    plan = tree_or_plan if isinstance(tree_or_plan, FigaroPlan) else \
-        build_plan(tree_or_plan)
-    r = figaro_qr(plan, dtype=dtype, **qr_kwargs)
-    n = plan.num_cols
-    feat = jnp.array([j for j in range(n) if j != label_col])
-    # Permute label last, re-triangularize the permuted R (cheap: N×N).
-    perm = jnp.concatenate([feat, jnp.array([label_col])])
-    rp = r[:, perm]
-    rr = jnp.linalg.qr(rp, mode="r")[:n]
-    r_ff = rr[: n - 1, : n - 1]
-    r_fl = rr[: n - 1, n - 1]
-    if ridge:
-        g = r_ff.T @ r_ff + ridge * jnp.eye(n - 1, dtype=dtype)
-        beta = jnp.linalg.solve(g, r_ff.T @ r_fl)
-    else:
-        beta = jax.scipy.linalg.solve_triangular(r_ff, r_fl, lower=False)
-    resid = jnp.abs(rr[n - 1, n - 1])
-    return beta, resid
+    plan = plan_for(tree_or_plan)
+    return default_engine().least_squares(plan, label_col, data, ridge=ridge,
+                                          dtype=dtype, **qr_kwargs)

@@ -3,13 +3,17 @@ leading `pod` axis (2 pods = 512 chips for the dry-run).
 
 `make_production_mesh` is a FUNCTION (module import never touches jax device
 state); the dry-run sets XLA_FLAGS before any jax import to get 512 host
-placeholder devices.
+placeholder devices.  Mesh construction goes through `repro.compat` so the
+same code runs on JAX versions with and without `AxisType` / the
+`axis_types=` kwarg.
 """
 
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import AxisType, make_mesh
 
 __all__ = ["make_production_mesh", "make_host_mesh"]
 
@@ -17,13 +21,12 @@ __all__ = ["make_production_mesh", "make_host_mesh"]
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_host_mesh(model: int = 1) -> Mesh:
     """Elastic small mesh over whatever devices exist (tests / CPU training)."""
     n = len(jax.devices())
     assert n % model == 0
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((n // model, model), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)

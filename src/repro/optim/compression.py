@@ -13,6 +13,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
+
 
 def _quantize(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
@@ -35,7 +37,7 @@ def compressed_psum(grads: Any, residual: Any, axis: str) -> tuple[Any, Any]:
         # int8 payload all-reduce (sum), scales all-gathered (tiny).
         qsum = jax.lax.psum(q.astype(jnp.int32), axis)
         ssum = jax.lax.pmean(scale, axis)  # shared scale approximation
-        out = qsum.astype(jnp.float32) * ssum / jax.lax.axis_size(axis)
+        out = qsum.astype(jnp.float32) * ssum / axis_size(axis)
         return out.astype(g.dtype), err.astype(r.dtype)
 
     out = jax.tree_util.tree_map(one, grads, residual)

@@ -1,10 +1,17 @@
-"""Serving: prefill / decode steps + a batched greedy/temperature sampler.
+"""Serving: prefill / decode steps, a batched greedy/temperature sampler, and
+the batched FiGaRo factorization server.
 
 ``make_prefill`` / ``make_decode_step`` are the functions the dry-run lowers
 for the prefill_* / decode_* / long_* shapes. The KV cache is sharded batch-
 over-(pod,data) normally, and sequence-over-data for global_batch==1
 long-context decode (context parallelism — GSPMD inserts the online-softmax
 combine collectives).
+
+``make_figaro_server`` is the linear-algebra-over-joins counterpart: one join
+structure (a `FigaroPlan`), many concurrent users' feature-sets — each dispatch
+vmaps Algorithm 2 + post-processing over a leading batch axis through a
+`FigaroEngine` with donated request buffers, so serving cost per request is
+one cached executable launch.
 """
 
 from __future__ import annotations
@@ -16,11 +23,61 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.engine import FigaroEngine
+from repro.core.join_tree import FigaroPlan
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
 from repro.sharding.rules import data_axes
 
-__all__ = ["make_prefill", "make_decode_step", "cache_specs", "sample_loop"]
+__all__ = ["make_prefill", "make_decode_step", "cache_specs", "sample_loop",
+           "make_figaro_server"]
+
+
+def make_figaro_server(plan: FigaroPlan, *, kind: str = "qr",
+                       label_col: int | None = None,
+                       dtype=jnp.float32, method: str = "tsqr",
+                       leaf_rows: int = 256, engine: FigaroEngine | None = None):
+    """Batched FiGaRo serving endpoint for one join structure.
+
+    Returns ``serve(data_batch)`` taking per-node [B, m_i, n_i] request
+    buffers and answering B requests per dispatch:
+
+      kind="qr"   -> R      [B, N, N]
+      kind="svd"  -> (s [B, N], Vt [B, N, N])
+      kind="lsq"  -> per-request (beta [N-1], residual) against ``label_col``
+                     (served per-sample through the engine's cached executable;
+                     the regression read itself is N×N and join-size-free)
+
+    The engine donates request buffers (they are consumed by the dispatch that
+    answers them) and compiles once per plan signature — subsequent batches,
+    and other plans with the same signature, are launch-only.
+    """
+    engine = engine if engine is not None else FigaroEngine(donate_data=True)
+
+    if kind == "qr":
+        def serve(data_batch):
+            return engine.qr(plan, data_batch, batched=True, dtype=dtype,
+                             method=method, leaf_rows=leaf_rows)
+    elif kind == "svd":
+        def serve(data_batch):
+            return engine.svd(plan, data_batch, batched=True, dtype=dtype,
+                              method=method, leaf_rows=leaf_rows)
+    elif kind == "lsq":
+        if label_col is None:
+            raise ValueError("kind='lsq' needs label_col")
+
+        def serve(data_batch):
+            b = data_batch[0].shape[0]
+            out = [engine.least_squares(
+                plan, label_col, [d[i] for d in data_batch], dtype=dtype,
+                method=method, leaf_rows=leaf_rows) for i in range(b)]
+            betas = jnp.stack([o[0] for o in out])
+            resids = jnp.stack([o[1] for o in out])
+            return betas, resids
+    else:
+        raise ValueError(f"unknown serve kind {kind!r}")
+
+    return serve
 
 
 def make_prefill(cfg: ModelConfig, max_len: int):

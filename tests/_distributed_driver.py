@@ -15,8 +15,8 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-from jax.sharding import AxisType  # noqa: E402
 
+from repro.compat import AxisType, make_mesh  # noqa: E402
 from repro.core.relation import Database, full_reduce  # noqa: E402
 from repro.core.join_tree import JoinTree, build_plan  # noqa: E402
 from repro.core.materialize import materialize_join  # noqa: E402
@@ -29,7 +29,7 @@ from repro.core.distributed import (distributed_postprocess_r0,  # noqa: E402
 def main() -> None:
     assert len(jax.devices()) == 8, jax.devices()
     rng = np.random.default_rng(2)
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
 
     tables = {
         "F": ({"a": rng.integers(0, 8, 60), "b": rng.integers(0, 5, 60)},

@@ -1,0 +1,212 @@
+"""Compiled FiGaRo engine: plan-as-pytree jit, batched serving, cache hits,
+and the scatter-free R₀ assembly path."""
+
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import FigaroEngine
+from repro.core.figaro import figaro_r0, figaro_r0_batched
+from repro.core.join_tree import build_plan
+from repro.core.materialize import materialize_join
+from repro.data.relational import cartesian
+
+from helpers import random_acyclic_db
+
+# Batched-vs-per-sample coverage: a path join, a star join, and a Cartesian
+# edge (constant keys => the degenerate single-group path).
+BATCH_TOPOLOGIES = {
+    "path": ("chain3", False),
+    "star": ("star3", False),
+    "cartesian": ("chain2", True),
+}
+
+
+def _plan(topology, rng):
+    name, cart = BATCH_TOPOLOGIES[topology]
+    _, tree, plan = random_acyclic_db(name, rng, cartesian=cart)
+    return tree, plan
+
+
+def _batch(plan, rng, b, dtype):
+    return tuple(
+        np.stack([rng.normal(size=np.asarray(d).shape) for _ in range(b)])
+        .astype(dtype) for d in plan.data)
+
+
+# -- acceptance: batched == per-sample on >= 3 join topologies ----------------
+
+
+@pytest.mark.parametrize("topology", list(BATCH_TOPOLOGIES))
+@pytest.mark.parametrize("dtype,tol", [(np.float32, 1e-5),
+                                       (np.float64, 1e-10)])
+def test_batched_r0_matches_per_sample(rng, topology, dtype, tol):
+    _, plan = _plan(topology, rng)
+    batch = _batch(plan, rng, 4, dtype)
+    rb = np.asarray(figaro_r0_batched(plan, batch, dtype=dtype))
+    scale = max(np.abs(rb).max(), 1.0)
+    for i in range(4):
+        ri = np.asarray(figaro_r0(plan, [d[i] for d in batch], dtype=dtype))
+        assert np.abs(rb[i] - ri).max() / scale < tol, (topology, i)
+
+
+@pytest.mark.parametrize("topology", list(BATCH_TOPOLOGIES))
+def test_engine_batched_qr_matches_per_sample(rng, topology):
+    _, plan = _plan(topology, rng)
+    engine = FigaroEngine()
+    batch = _batch(plan, rng, 3, np.float64)
+    rb = np.asarray(engine.qr(plan, batch, batched=True, dtype=jnp.float64))
+    for i in range(3):
+        ri = np.asarray(engine.qr(plan, [d[i] for d in batch],
+                                  dtype=jnp.float64))
+        np.testing.assert_allclose(rb[i], ri, atol=1e-10 * max(
+            np.abs(ri).max(), 1.0), err_msg=topology)
+
+
+def test_batched_gram_invariant(rng):
+    """Sample 0 of the batch is the plan's own data: R₀ᵀR₀ == AᵀA against the
+    materialized join, per batch element."""
+    tree, plan = _plan("star", rng)
+    a = np.asarray(materialize_join(tree))
+    other = tuple(
+        np.stack([np.asarray(d), 2.0 * np.asarray(d)]) for d in plan.data)
+    rb = np.asarray(figaro_r0_batched(plan, other, dtype=jnp.float64))
+    g = a.T @ a
+    err0 = np.abs(rb[0].T @ rb[0] - g).max() / max(np.abs(g).max(), 1e-30)
+    err1 = np.abs(rb[1].T @ rb[1] - 4.0 * g).max() / max(np.abs(g).max(), 1e-30)
+    assert err0 < 1e-11 and err1 < 1e-10, (err0, err1)
+
+
+# -- acceptance: one compilation per plan signature ---------------------------
+
+
+def test_engine_cache_hit_same_plan(rng):
+    _, plan = _plan("path", rng)
+    engine = FigaroEngine()
+    engine.qr(plan, dtype=jnp.float64)
+    assert engine.trace_count("qr") == 1
+    engine.qr(plan, dtype=jnp.float64)  # same plan, same signature
+    assert engine.trace_count("qr") == 1
+
+
+def test_engine_cache_hit_across_plans_same_signature(rng):
+    """A *different* plan object with equal static spec + data shapes must not
+    retrace — the signature, not the identity, keys the executable cache."""
+    _, plan = _plan("star", rng)
+    engine = FigaroEngine()
+    engine.qr(plan, dtype=jnp.float64)
+    plan2 = plan.with_data([2.0 * np.asarray(d) for d in plan.data])
+    r2 = engine.qr(plan2, dtype=jnp.float64)
+    assert engine.trace_count("qr") == 1, "same-signature plan retraced"
+    # and it really used plan2's data
+    r1 = engine.qr(plan, dtype=jnp.float64)
+    np.testing.assert_allclose(np.asarray(r2), 2.0 * np.asarray(r1),
+                               atol=1e-9 * np.abs(np.asarray(r1)).max())
+
+
+def test_engine_retraces_on_new_signature(rng):
+    _, plan_a = _plan("path", rng)
+    _, plan_b = _plan("star", rng)  # different topology => different spec
+    engine = FigaroEngine()
+    engine.qr(plan_a, dtype=jnp.float64)
+    engine.qr(plan_b, dtype=jnp.float64)
+    assert engine.trace_count("qr") == 2
+    engine.qr(plan_a, dtype=jnp.float64)
+    engine.qr(plan_b, dtype=jnp.float64)
+    assert engine.trace_count("qr") == 2
+
+
+def test_engine_batched_cache_hit(rng):
+    _, plan = _plan("cartesian", rng)
+    engine = FigaroEngine(donate_data=False)
+    batch = _batch(plan, rng, 2, np.float64)
+    engine.r0(plan, batch, batched=True, dtype=jnp.float64)
+    engine.r0(plan, batch, batched=True, dtype=jnp.float64)
+    assert engine.trace_count("r0_batched") == 1
+
+
+# -- acceptance: scatter-free R0 assembly, plan passes through jit ------------
+
+
+def test_r0_assembly_is_scatter_free(rng):
+    """The R₀ emission path must contain no scatter / dynamic_update_slice —
+    only concatenation/padding. (scatter-add from the counts' segment_sum is
+    fine: that's Algorithm 1's reduction, not R₀ assembly.)"""
+    for topology in BATCH_TOPOLOGIES:
+        _, plan = _plan(topology, rng)
+        jaxpr = str(jax.make_jaxpr(
+            lambda p, d: figaro_r0(p, list(d), dtype=jnp.float64))(
+                plan.without_data(), plan.data))
+        assert "dynamic_update_slice" not in jaxpr, topology
+        assert not re.search(r"\bscatter\[", jaxpr), topology
+
+
+def test_figaro_r0_jits_with_plan_argument(rng):
+    """The plan crosses the jit boundary as a pytree argument; the traced
+    function is plan-generic (no closure rebuild per plan)."""
+    _, plan = _plan("star", rng)
+    traces = []
+
+    @jax.jit
+    def f(p, d):
+        traces.append(1)
+        return figaro_r0(p, list(d), dtype=jnp.float64)
+
+    r_a = f(plan.without_data(), plan.data)
+    plan2 = plan.with_data([3.0 * np.asarray(d) for d in plan.data])
+    r_b = f(plan2.without_data(), plan2.data)
+    assert len(traces) == 1
+    np.testing.assert_allclose(np.asarray(r_b), 3.0 * np.asarray(r_a),
+                               atol=1e-9 * np.abs(np.asarray(r_a)).max())
+
+
+def test_plan_pytree_roundtrip(rng):
+    _, plan = _plan("path", rng)
+    leaves, treedef = jax.tree_util.tree_flatten(plan)
+    plan2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert plan2.spec == plan.spec
+    r1 = np.asarray(figaro_r0(plan, dtype=jnp.float64))
+    r2 = np.asarray(figaro_r0(plan2, dtype=jnp.float64))
+    np.testing.assert_array_equal(r1, r2)
+
+
+# -- engine downstream reads on the Cartesian-edge schema ---------------------
+
+
+def test_make_figaro_server_batched_qr_and_lsq(rng):
+    from repro.train.serve import make_figaro_server
+
+    _, plan = _plan("star", rng)
+    batch = _batch(plan, rng, 3, np.float64)
+    serve_qr = make_figaro_server(plan, kind="qr", dtype=jnp.float64)
+    rb = np.asarray(serve_qr(batch))
+    engine = FigaroEngine()
+    for i in range(3):
+        ri = np.asarray(engine.qr(plan, [d[i] for d in batch],
+                                  dtype=jnp.float64))
+        np.testing.assert_allclose(rb[i], ri,
+                                   atol=1e-10 * max(np.abs(ri).max(), 1.0))
+
+    if plan.num_cols >= 2:
+        serve_lsq = make_figaro_server(plan, kind="lsq",
+                                       label_col=plan.num_cols - 1,
+                                       dtype=jnp.float64)
+        betas, resids = serve_lsq(batch)
+        assert betas.shape == (3, plan.num_cols - 1)
+        assert resids.shape == (3,)
+
+
+def test_engine_svd_cartesian_edge():
+    tree = cartesian(9, 6, n1=2, n2=2, seed=3)
+    plan = build_plan(tree)
+    engine = FigaroEngine()
+    s, vt = engine.svd(plan, dtype=jnp.float64)
+    a = np.asarray(materialize_join(tree))
+    np.testing.assert_allclose(np.asarray(s),
+                               np.linalg.svd(a, compute_uv=False), rtol=1e-9)
+    assert engine.trace_count("svd") == 1
+    engine.svd(plan, dtype=jnp.float64)
+    assert engine.trace_count("svd") == 1

@@ -42,6 +42,19 @@ def test_normalize_sign_makes_diag_positive(rng):
     assert (np.diag(r) >= 0).all()
 
 
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float16, jnp.float32,
+                                   jnp.float64])
+def test_normalize_sign_preserves_dtype(rng, dtype):
+    """The sign vector is built in r.dtype — low-precision R (bf16/f16
+    serving) must come back un-upcast, with the same |values|."""
+    r = jnp.asarray(rng.normal(size=(9, 9)), dtype=dtype)
+    out = normalize_sign(r)
+    assert out.dtype == dtype, (out.dtype, dtype)
+    np.testing.assert_array_equal(np.abs(np.asarray(out, np.float64)),
+                                  np.abs(np.asarray(r, np.float64)))
+    assert (np.diag(np.asarray(out, np.float64)) >= 0).all()
+
+
 def test_tsqr_leaf_insensitivity(rng):
     """TSQR's combine order (leaf size) must not change R — the same freedom
     the paper's THIN exploits across threads."""

@@ -6,8 +6,9 @@ Uses AbstractMesh — spec construction must not require 256 real devices.
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import AxisType, make_abstract_mesh
 from repro.configs import ARCH_NAMES, get_config
 from repro.models import transformer as tf
 from repro.sharding.rules import data_axes, param_specs
@@ -16,7 +17,8 @@ from repro.sharding.rules import data_axes, param_specs
 def _abstract_mesh(multi_pod=False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return AbstractMesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_abstract_mesh(shape, axes,
+                              axis_types=(AxisType.Auto,) * len(axes))
 
 
 @pytest.mark.parametrize("name", ARCH_NAMES)
