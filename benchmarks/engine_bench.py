@@ -1,7 +1,8 @@
-"""Engine microbenchmarks (this PR's tentpole): scatter vs scatter-free R₀
-assembly, and per-sample vs batched (vmapped) dispatch through `FigaroEngine`.
+"""Engine microbenchmarks: scatter vs scatter-free R₀ assembly, per-sample vs
+batched (vmapped) dispatch, and single-device vs mesh-sharded batched dispatch
+through `FigaroEngine`.
 
-Two comparisons, both on the paper-style schemas:
+Three comparisons, all on the paper-style schemas:
 
   * **assembly**: the pre-refactor emission path scattered every block into a
     zeroed [M×N] buffer with ``.at[].set`` (O(nodes) dislocated updates on the
@@ -9,6 +10,12 @@ Two comparisons, both on the paper-style schemas:
     slabs. Both jitted, same plan, same data — wall-clock ratio is the win.
   * **dispatch**: serving B feature-sets as B per-sample engine calls vs one
     vmapped batched dispatch (one launch, one executable).
+  * **sharded_dispatch**: the same global batch answered by the 1-executable
+    vmapped dispatch vs the `shard_map` dispatch over the local ``data`` mesh
+    (`make_data_mesh`). On the default single-CPU-device run the mesh is
+    1-wide and the ratio is ~1; run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to measure a real
+    mesh split.
 
 Emits the standard ``BENCH_engine.json`` (see `_util.write_bench_json`) so the
 perf trajectory tracks this PR onward.
@@ -146,6 +153,21 @@ def run(csv: Csv, *, fast: bool = False) -> None:
         add(name, "dispatch_speedup", t_loop / t_batch)
         add(name, "traces_qr", engine.trace_count("qr"))
         add(name, "traces_qr_batched", engine.trace_count("qr_batched"))
+
+        # -- single-device vs mesh-sharded batched dispatch -----------------
+        from repro.launch.mesh import make_data_mesh
+
+        mesh = make_data_mesh()
+        sharded = lambda: engine.qr(plan, batch, batched=True, shard=mesh,
+                                    dtype=jnp.float64)
+        t_shard = timeit(sharded)
+        case = f"{name}:sharded_dispatch"
+        add(case, "mesh_devices", mesh.shape["data"])
+        add(case, "batch_size", b)
+        add(case, "single_device_s", t_batch)
+        add(case, "mesh_s", t_shard)
+        add(case, "speedup", t_batch / t_shard)
+        add(case, "traces_qr_batched_total", engine.trace_count("qr_batched"))
 
     write_bench_json("engine", rows)
 

@@ -87,3 +87,21 @@ assert engine.trace_count("qr_batched") == 1
 print(f"engine              : served {B} feature-sets in one dispatch, "
       f"{engine.trace_count()} compilations total")
 print("OK — compiled engine: batched serving off one cached executable.")
+
+# --- 5. sharded serving: split the request batch over the data mesh ---------
+# `shard=mesh` (or shard=(mesh, axis)) splits the leading batch axis over the
+# mesh's `data` axis with shard_map: ONE cached executable per (plan
+# signature, mesh signature) answers the global batch across all devices. The
+# batch is padded/bucketed to the mesh size inside the engine, so any B works.
+# The same entry points back `train.serve.make_figaro_server(..., mesh=mesh)`
+# (kinds: qr / svd / pca / lsq) and `distributed.partitioned_figaro_qr(...,
+# mesh=mesh)` places one fact partition per device slot.
+from repro.launch.mesh import make_data_mesh  # noqa: E402
+
+mesh = make_data_mesh()  # all local devices on a 1-D "data" axis
+r_mesh = engine.qr(plan, batch, batched=True, shard=mesh, dtype=jnp.float64)
+assert np.abs(np.asarray(r_mesh) - np.asarray(r_batch)).max() < 1e-10
+print(f"sharded             : same {B}-request batch over "
+      f"{mesh.shape['data']} device(s); run under "
+      "XLA_FLAGS=--xla_force_host_platform_device_count=4 to spread it")
+print("OK — sharded serving: one executable, the whole mesh answers.")

@@ -65,9 +65,28 @@ def make_abstract_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
 
 
 if hasattr(jax, "shard_map"):  # jax >= 0.6
-    shard_map = jax.shard_map
+    _shard_map = jax.shard_map
 else:
-    from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+    """`shard_map` with the replication-check kwarg normalized across JAX
+    versions: pre-0.7 spells it ``check_rep``, newer JAX renamed it to
+    ``check_vma``. Callers may pass either; the unsupported spelling is
+    translated rather than exploding on the pinned version."""
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kwargs)
+    except TypeError:
+        if "check_rep" in kwargs:
+            kwargs["check_vma"] = kwargs.pop("check_rep")
+        elif "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        else:
+            raise
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kwargs)
 
 
 def axis_size(axis_name: str):

@@ -51,21 +51,47 @@ __all__ = [
 def butterfly_qr_combine(r_local: jnp.ndarray, axis_name: str,
                          axis_size: int, leaf_qr=householder_qr_r) -> jnp.ndarray:
     """Inside shard_map: combine per-shard R factors so all shards hold the
-    final R. log₂(P) rounds; round d stacks each shard's R with its distance-d
-    butterfly partner's and re-triangularizes ([2n, n] QR)."""
-    n = r_local.shape[-1]
+    final R.
+
+    For a power-of-two ``axis_size``: log₂(P) butterfly rounds; round d stacks
+    each shard's R with its distance-d partner's and re-triangularizes
+    ([2n, n] QR). For any other P the pure butterfly is *invalid* — partner
+    ``i ^ d`` can point past the axis (P=3 pairs shard 2 with nonexistent
+    shard 3) and that shard would end the loop without the others'
+    contributions. Instead the remainder shards [P₂, P) (P₂ = largest power of
+    two ≤ P) are first folded into shards [0, P−P₂), the butterfly runs on the
+    [0, P₂) core, and the combined R is broadcast back to the folded-away
+    shards: 1 + log₂(P₂) + 1 rounds, every round a valid permutation.
+    """
+    axis_size = int(axis_size)
+    if axis_size < 1:
+        raise ValueError(f"axis_size must be a positive int, got {axis_size}")
+    if axis_size == 1:
+        return r_local
     r = r_local
+    idx = jax.lax.axis_index(axis_name)
+    core = 1 << (axis_size.bit_length() - 1)  # largest power of two <= P
+    rem = axis_size - core
+    if rem:  # fold shards [core, P) into [0, rem)
+        r_in = jax.lax.ppermute(r, axis_name,
+                                [(core + i, i) for i in range(rem)])
+        r = jnp.where(idx < rem, leaf_qr(jnp.concatenate([r, r_in], axis=0)),
+                      r)
     d = 1
-    while d < axis_size:
-        perm = [(i, i ^ d) for i in range(axis_size)]
+    while d < core:
+        perm = [(i, i ^ d) for i in range(core)]
         r_other = jax.lax.ppermute(r, axis_name, perm)
-        # Stable stacking order (lower index first) keeps all shards bitwise
-        # identical after each round.
-        idx = jax.lax.axis_index(axis_name)
+        # Stable stacking order (lower index first) keeps all core shards
+        # bitwise identical after each round.
         lo = jnp.where(idx < (idx ^ d), r, r_other)
         hi = jnp.where(idx < (idx ^ d), r_other, r)
-        r = leaf_qr(jnp.concatenate([lo, hi], axis=0))
+        r = jnp.where(idx < core, leaf_qr(jnp.concatenate([lo, hi], axis=0)),
+                      r)
         d *= 2
+    if rem:  # broadcast the combined R back to the folded-away shards
+        r_bcast = jax.lax.ppermute(r, axis_name,
+                                   [(i, core + i) for i in range(rem)])
+        r = jnp.where(idx >= core, r_bcast, r)
     return r
 
 
@@ -83,6 +109,10 @@ def distributed_postprocess_r0(
     mp = -(-m // p) * p
     if mp != m:
         r0 = jnp.concatenate([r0, jnp.zeros((mp - m, n), r0.dtype)], axis=0)
+    # Pre-shard the rows over the mesh: inputs committed to a single device
+    # (e.g. the stacked per-partition Rs) would otherwise be rejected by the
+    # mesh-wide computation.
+    r0 = jax.device_put(r0, NamedSharding(mesh, P(axis, None)))
 
     local_qr = functools.partial(blocked_qr_r, panel=panel,
                                  use_kernel=use_kernel)
@@ -162,22 +192,43 @@ def partitioned_figaro_qr(
     method: str = "tsqr",
     use_kernel: bool = False,
     engine=None,
+    mesh: Mesh | None = None,
+    axis: str = "data",
 ) -> jnp.ndarray:
     """FiGaRo over ``num_parts`` fact partitions + TSQR combine.
 
     Per-partition programs are independent (different static shapes — in
-    production each runs on its own pod); the combine stacks the partial R
-    factors and re-triangularizes. Each partition dispatches through the
-    shared `FigaroEngine`, whose executable cache keys on the partition's plan
-    signature — repeat calls (elastic re-dispatch, refreshed data) reuse the
-    compiled programs instead of re-tracing per call.
+    production each runs on its own pod). Each partition dispatches through
+    the shared `FigaroEngine`, whose executable cache keys on the partition's
+    plan signature — repeat calls (elastic re-dispatch, refreshed data) reuse
+    the compiled programs instead of re-tracing per call.
+
+    Without a ``mesh`` the partitions run (async) on the default device and
+    the partial R factors are TSQR-combined locally. With a ``mesh`` each
+    partition's program is placed on its own device slot (round-robin over the
+    mesh — jit dispatch is async, so the per-partition programs execute
+    concurrently) and the stacked partial Rs are combined on the mesh itself
+    via `distributed_postprocess_r0`'s butterfly.
     """
     from .engine import default_engine
 
     engine = engine if engine is not None else default_engine()
     parts = partition_fact_table(tree, num_parts)
-    rs = [engine.qr(build_plan(t), dtype=dtype, method=method,
-                    use_kernel=use_kernel) for t in parts]
-    stacked = jnp.concatenate(rs, axis=0)
-    return normalize_sign(tsqr_r(stacked, leaf_rows=max(
-        r.shape[0] for r in rs)))
+    if mesh is None:
+        rs = [engine.qr(build_plan(t), dtype=dtype, method=method,
+                        use_kernel=use_kernel) for t in parts]
+        stacked = jnp.concatenate(rs, axis=0)
+        return normalize_sign(tsqr_r(stacked, leaf_rows=max(
+            r.shape[0] for r in rs)))
+    slots = mesh.devices.reshape(-1)
+    rs = []
+    for i, t in enumerate(parts):
+        with jax.default_device(slots[i % slots.size]):
+            rs.append(engine.qr(build_plan(t), dtype=dtype, method=method,
+                                use_kernel=use_kernel))
+    # Colocate the per-slot Rs before stacking (cross-device concat is an
+    # error), then THIN-combine the [P·N, N] stack over the mesh.
+    stacked = jnp.concatenate(
+        [jax.device_put(r, slots[0]) for r in rs], axis=0)
+    return distributed_postprocess_r0(stacked, mesh, axis,
+                                      use_kernel=use_kernel)

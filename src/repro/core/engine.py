@@ -18,6 +18,15 @@ pytree argument:
     factorization, many downstream reads" leverage: everything downstream
     (SVD, PCA, regression) reads off the one R.
 
+  * ``shard=mesh`` (or ``shard=(mesh, axis)``) additionally splits the leading
+    request-batch axis of a batched dispatch over the mesh axis with
+    `shard_map`: one cached executable answers a *global* batch across all
+    devices. The batch is padded up to a multiple of the axis size (by
+    repeating the trailing request, so no degenerate all-zero pipelines run on
+    the pad) and the pad is sliced off the result — batch sizes in the same
+    padded bucket share one executable. The executable cache keys on the mesh
+    signature as well as the plan signature.
+
 Trace counts are tracked per pipeline kind (`trace_count`) so tests and
 benchmarks can assert cache hits instead of guessing.
 """
@@ -26,11 +35,15 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from .counts import compute_counts
 from .figaro import figaro_r0
@@ -91,8 +104,12 @@ class FigaroEngine:
         "svd_batched": ("dtype", "method", "leaf_rows", "panel", "use_kernel"),
         "pca": ("dtype", "k", "center", "method", "leaf_rows", "panel",
                 "use_kernel"),
+        "pca_batched": ("dtype", "k", "center", "method", "leaf_rows",
+                        "panel", "use_kernel"),
         "least_squares": ("dtype", "label_col", "ridge", "method",
                           "leaf_rows", "panel", "use_kernel"),
+        "least_squares_batched": ("dtype", "label_col", "ridge", "method",
+                                  "leaf_rows", "panel", "use_kernel"),
     }
 
     def __init__(self, *, donate_data: bool = True):
@@ -112,8 +129,55 @@ class FigaroEngine:
     def _bump(self, kind: str) -> None:
         self._trace_counts[kind] += 1
 
-    def _dispatch(self, kind: str, plan: FigaroPlan, data, **options):
+    @staticmethod
+    def _normalize_shard(shard) -> tuple[Mesh | None, str | None]:
+        """``shard=mesh`` or ``shard=(mesh, axis)`` → (mesh, axis)."""
+        if shard is None:
+            return None, None
+        mesh, axis = shard if isinstance(shard, tuple) else (shard, "data")
+        if axis not in mesh.shape:
+            raise ValueError(
+                f"shard axis {axis!r} not in mesh axes {tuple(mesh.shape)}")
+        return mesh, axis
+
+    def _make_jitted(self, kind: str, donate: bool, mesh, axis):
+        impl = getattr(self, f"_{kind}_impl")
+        if mesh is None:
+            inner = impl
+        else:
+            def inner(plan, data, **options):
+                # Per-shard body: the plan (index arrays) is replicated, the
+                # leading request-batch axis of every data leaf is split over
+                # ``mesh[axis]``; every output leaf has a leading batch axis.
+                body = lambda p, d: impl(p, d, **options)
+                mapped = shard_map(body, mesh=mesh,
+                                   in_specs=(P(), P(axis)),
+                                   out_specs=P(axis))
+                return mapped(plan, data)
+
+        # wraps() keeps impl's signature visible so static_argnames resolve,
+        # and putting the bump here (outside shard_map) guarantees exactly one
+        # count per compilation however many times shard_map replays the body.
+        @functools.wraps(impl)
+        def wrapper(plan, data, **options):
+            self._bump(kind)
+            return inner(plan, data, **options)
+
+        return jax.jit(wrapper, static_argnames=self._STATIC[kind],
+                       donate_argnums=(1,) if donate else ())
+
+    def _dispatch(self, kind: str, plan: FigaroPlan, data, *, shard=None,
+                  **options):
+        mesh, axis = self._normalize_shard(shard)
+        if mesh is not None and not kind.endswith("_batched"):
+            raise ValueError(
+                f"shard= requires a batched dispatch, got kind={kind!r}")
         if data is None:
+            if mesh is not None:
+                # plan.data is per-node [m_i, n_i] — there is no request-batch
+                # axis to shard; padding it would fail deep inside vmap.
+                raise ValueError(
+                    "shard= needs an explicit [B, m_i, n_i] data batch")
             data, donate = plan.data, False  # plan-owned buffers stay alive
         else:
             data = tuple(data)
@@ -123,19 +187,35 @@ class FigaroEngine:
             plan_owned = {id(d) for d in plan.data}
             donate = self.donate_data and not any(
                 id(d) in plan_owned for d in data)
-        key = (kind, donate)
+        b = pad = 0
+        if mesh is not None:
+            p = mesh.shape[axis]
+            b = int(data[0].shape[0])
+            if b == 0:
+                raise ValueError("sharded dispatch needs a non-empty batch")
+            pad = -(-b // p) * p - b
+            if pad:
+                # Bucket the batch to a multiple of the mesh axis by repeating
+                # the last request: near-miss batch sizes share an executable
+                # and the pad rides through a well-posed pipeline (an all-zero
+                # pad would push singular systems through lsq/svd).
+                data = tuple(jnp.concatenate(
+                    [jnp.asarray(d)] + [jnp.asarray(d)[-1:]] * pad)
+                    for d in data)
+                donate = self.donate_data  # padded buffers are fresh
+            data = jax.device_put(data, NamedSharding(mesh, P(axis)))
+        key = (kind, donate, mesh, axis)
         if key not in self._jitted:
-            self._jitted[key] = jax.jit(
-                getattr(self, f"_{kind}_impl"),
-                static_argnames=self._STATIC[kind],
-                donate_argnums=(1,) if donate else (),
-            )
+            self._jitted[key] = self._make_jitted(kind, donate, mesh, axis)
         with warnings.catch_warnings():
             # On backends without donation (CPU) jax warns per dispatch;
             # semantics are unchanged, so keep serving loops quiet.
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable")
-            return self._jitted[key](plan.without_data(), data, **options)
+            out = self._jitted[key](plan.without_data(), data, **options)
+        if pad:
+            out = jax.tree.map(lambda x: x[:b], out)
+        return out
 
     @staticmethod
     def _canon(dtype) -> np.dtype:
@@ -144,11 +224,9 @@ class FigaroEngine:
     # -- traced pipeline bodies (run once per executable) --------------------
 
     def _r0_impl(self, plan, data, *, dtype, use_kernel):
-        self._bump("r0")
         return figaro_r0(plan, list(data), dtype=dtype, use_kernel=use_kernel)
 
     def _r0_batched_impl(self, plan, data, *, dtype, use_kernel):
-        self._bump("r0_batched")
         return jax.vmap(lambda d: figaro_r0(
             plan, list(d), dtype=dtype, use_kernel=use_kernel))(data)
 
@@ -160,43 +238,38 @@ class FigaroEngine:
 
     def _qr_impl(self, plan, data, *, dtype, method, leaf_rows, panel,
                  use_kernel):
-        self._bump("qr")
         return self._qr_one(plan, data, dtype=dtype, method=method,
                             leaf_rows=leaf_rows, panel=panel,
                             use_kernel=use_kernel)
 
     def _qr_batched_impl(self, plan, data, *, dtype, method, leaf_rows, panel,
                          use_kernel):
-        self._bump("qr_batched")
         return jax.vmap(lambda d: self._qr_one(
             plan, d, dtype=dtype, method=method, leaf_rows=leaf_rows,
             panel=panel, use_kernel=use_kernel))(data)
 
-    def _svd_impl(self, plan, data, *, dtype, method, leaf_rows, panel,
-                  use_kernel):
-        self._bump("svd")
+    def _svd_one(self, plan, data, *, dtype, method, leaf_rows, panel,
+                 use_kernel):
         r = self._qr_one(plan, data, dtype=dtype, method=method,
                          leaf_rows=leaf_rows, panel=panel,
                          use_kernel=use_kernel)
         _, s, vt = jnp.linalg.svd(r)
         return s, vt
 
-    def _svd_batched_impl(self, plan, data, *, dtype, method, leaf_rows,
-                          panel, use_kernel):
-        self._bump("svd_batched")
-
-        def one(d):
-            r = self._qr_one(plan, d, dtype=dtype, method=method,
+    def _svd_impl(self, plan, data, *, dtype, method, leaf_rows, panel,
+                  use_kernel):
+        return self._svd_one(plan, data, dtype=dtype, method=method,
                              leaf_rows=leaf_rows, panel=panel,
                              use_kernel=use_kernel)
-            _, s, vt = jnp.linalg.svd(r)
-            return s, vt
 
-        return jax.vmap(one)(data)
+    def _svd_batched_impl(self, plan, data, *, dtype, method, leaf_rows,
+                          panel, use_kernel):
+        return jax.vmap(lambda d: self._svd_one(
+            plan, d, dtype=dtype, method=method, leaf_rows=leaf_rows,
+            panel=panel, use_kernel=use_kernel))(data)
 
-    def _pca_impl(self, plan, data, *, k, center, dtype, method, leaf_rows,
-                  panel, use_kernel):
-        self._bump("pca")
+    def _pca_one(self, plan, data, *, k, center, dtype, method, leaf_rows,
+                 panel, use_kernel):
         r = self._qr_one(plan, data, dtype=dtype, method=method,
                          leaf_rows=leaf_rows, panel=panel,
                          use_kernel=use_kernel)
@@ -207,14 +280,29 @@ class FigaroEngine:
             gram = gram - total * jnp.outer(mean, mean)
         cov = gram / jnp.maximum(total - 1.0, 1.0)
         evals, evecs = jnp.linalg.eigh(cov)  # ascending
+        # The centered-Gram subtraction can leave tiny negative eigenvalues
+        # (a variance); clamp before the top-k select so near-constant
+        # columns report 0, not -1e-17.
+        evals = jnp.maximum(evals, jnp.zeros((), evals.dtype))
         order = jnp.argsort(-evals)[:k]
         return PCAResult(components=evecs[:, order].T,
                          explained_variance=evals[order],
                          mean=mean, num_rows=total)
 
-    def _least_squares_impl(self, plan, data, *, label_col, ridge, dtype,
-                            method, leaf_rows, panel, use_kernel):
-        self._bump("least_squares")
+    def _pca_impl(self, plan, data, *, k, center, dtype, method, leaf_rows,
+                  panel, use_kernel):
+        return self._pca_one(plan, data, k=k, center=center, dtype=dtype,
+                             method=method, leaf_rows=leaf_rows, panel=panel,
+                             use_kernel=use_kernel)
+
+    def _pca_batched_impl(self, plan, data, *, k, center, dtype, method,
+                          leaf_rows, panel, use_kernel):
+        return jax.vmap(lambda d: self._pca_one(
+            plan, d, k=k, center=center, dtype=dtype, method=method,
+            leaf_rows=leaf_rows, panel=panel, use_kernel=use_kernel))(data)
+
+    def _least_squares_one(self, plan, data, *, label_col, ridge, dtype,
+                           method, leaf_rows, panel, use_kernel):
         r = self._qr_one(plan, data, dtype=dtype, method=method,
                          leaf_rows=leaf_rows, panel=panel,
                          use_kernel=use_kernel)
@@ -229,58 +317,87 @@ class FigaroEngine:
         if ridge:
             g = r_ff.T @ r_ff + ridge * jnp.eye(n - 1, dtype=dtype)
             beta = jnp.linalg.solve(g, r_ff.T @ r_fl)
+            # The ridge solution does not zero the projected residual, so
+            # ‖Aβ − y‖ keeps both terms: ‖r_ff·β − r_fl‖² + rr[n−1,n−1]².
+            resid = jnp.sqrt(jnp.sum(jnp.square(r_ff @ beta - r_fl))
+                             + jnp.square(rr[n - 1, n - 1]))
         else:
             beta = jax.scipy.linalg.solve_triangular(r_ff, r_fl, lower=False)
-        resid = jnp.abs(rr[n - 1, n - 1])
+            resid = jnp.abs(rr[n - 1, n - 1])
         return beta, resid
+
+    def _least_squares_impl(self, plan, data, *, label_col, ridge, dtype,
+                            method, leaf_rows, panel, use_kernel):
+        return self._least_squares_one(
+            plan, data, label_col=label_col, ridge=ridge, dtype=dtype,
+            method=method, leaf_rows=leaf_rows, panel=panel,
+            use_kernel=use_kernel)
+
+    def _least_squares_batched_impl(self, plan, data, *, label_col, ridge,
+                                    dtype, method, leaf_rows, panel,
+                                    use_kernel):
+        return jax.vmap(lambda d: self._least_squares_one(
+            plan, d, label_col=label_col, ridge=ridge, dtype=dtype,
+            method=method, leaf_rows=leaf_rows, panel=panel,
+            use_kernel=use_kernel))(data)
 
     # -- public API ----------------------------------------------------------
 
     def r0(self, plan: FigaroPlan, data=None, *, batched: bool = False,
-           dtype=jnp.float32, use_kernel: bool = False) -> jnp.ndarray:
-        """R₀ of Algorithm 2; ``batched`` expects [B, m_i, n_i] data leaves."""
+           shard=None, dtype=jnp.float32,
+           use_kernel: bool = False) -> jnp.ndarray:
+        """R₀ of Algorithm 2; ``batched`` expects [B, m_i, n_i] data leaves.
+
+        ``shard`` (a `Mesh` or ``(mesh, axis)``; requires ``batched=True``)
+        splits the batch axis over the mesh — one executable per
+        (plan signature, mesh signature) answers the global batch.
+        """
         return self._dispatch("r0_batched" if batched else "r0", plan, data,
-                              dtype=self._canon(dtype), use_kernel=use_kernel)
+                              shard=shard, dtype=self._canon(dtype),
+                              use_kernel=use_kernel)
 
     def qr(self, plan: FigaroPlan, data=None, *, batched: bool = False,
-           dtype=jnp.float32, method: str = "tsqr", leaf_rows: int = 256,
-           panel: int = 32, use_kernel: bool = False) -> jnp.ndarray:
+           shard=None, dtype=jnp.float32, method: str = "tsqr",
+           leaf_rows: int = 256, panel: int = 32,
+           use_kernel: bool = False) -> jnp.ndarray:
         """Upper-triangular R of the join's QR ([B, N, N] when batched)."""
         return self._dispatch(
-            "qr_batched" if batched else "qr", plan, data,
+            "qr_batched" if batched else "qr", plan, data, shard=shard,
             dtype=self._canon(dtype), method=method, leaf_rows=leaf_rows,
             panel=panel, use_kernel=use_kernel)
 
     def svd(self, plan: FigaroPlan, data=None, *, batched: bool = False,
-            dtype=jnp.float64, method: str = "tsqr", leaf_rows: int = 256,
-            panel: int = 32, use_kernel: bool = False):
+            shard=None, dtype=jnp.float64, method: str = "tsqr",
+            leaf_rows: int = 256, panel: int = 32, use_kernel: bool = False):
         """Singular values + right-singular vectors of the join matrix."""
         return self._dispatch(
-            "svd_batched" if batched else "svd", plan, data,
+            "svd_batched" if batched else "svd", plan, data, shard=shard,
             dtype=self._canon(dtype), method=method, leaf_rows=leaf_rows,
             panel=panel, use_kernel=use_kernel)
 
-    def pca(self, plan: FigaroPlan, data=None, *, k: int | None = None,
-            center: bool = True, dtype=jnp.float64, method: str = "tsqr",
-            leaf_rows: int = 256, panel: int = 32,
-            use_kernel: bool = False) -> PCAResult:
+    def pca(self, plan: FigaroPlan, data=None, *, batched: bool = False,
+            shard=None, k: int | None = None, center: bool = True,
+            dtype=jnp.float64, method: str = "tsqr", leaf_rows: int = 256,
+            panel: int = 32, use_kernel: bool = False) -> PCAResult:
         """PCA of the join matrix from R (+ factorized means when centering)."""
         n = plan.spec.num_cols
         k = n if k is None else min(k, n)
         return self._dispatch(
-            "pca", plan, data, k=k, center=center, dtype=self._canon(dtype),
-            method=method, leaf_rows=leaf_rows, panel=panel,
-            use_kernel=use_kernel)
+            "pca_batched" if batched else "pca", plan, data, shard=shard,
+            k=k, center=center, dtype=self._canon(dtype), method=method,
+            leaf_rows=leaf_rows, panel=panel, use_kernel=use_kernel)
 
     def least_squares(self, plan: FigaroPlan, label_col: int, data=None, *,
-                      ridge: float = 0.0, dtype=jnp.float64,
-                      method: str = "tsqr", leaf_rows: int = 256,
-                      panel: int = 32, use_kernel: bool = False):
+                      batched: bool = False, shard=None, ridge: float = 0.0,
+                      dtype=jnp.float64, method: str = "tsqr",
+                      leaf_rows: int = 256, panel: int = 32,
+                      use_kernel: bool = False):
         """argmin_β ‖A[:, feats]·β − A[:, label]‖² over the unmaterialized join."""
         return self._dispatch(
-            "least_squares", plan, data, label_col=label_col,
-            ridge=float(ridge), dtype=self._canon(dtype), method=method,
-            leaf_rows=leaf_rows, panel=panel, use_kernel=use_kernel)
+            "least_squares_batched" if batched else "least_squares", plan,
+            data, shard=shard, label_col=label_col, ridge=float(ridge),
+            dtype=self._canon(dtype), method=method, leaf_rows=leaf_rows,
+            panel=panel, use_kernel=use_kernel)
 
 
 _DEFAULT_ENGINE: FigaroEngine | None = None

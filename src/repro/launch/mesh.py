@@ -15,7 +15,7 @@ from jax.sharding import Mesh
 
 from repro.compat import AxisType, make_mesh
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_data_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -30,3 +30,16 @@ def make_host_mesh(model: int = 1) -> Mesh:
     assert n % model == 0
     return make_mesh((n // model, model), ("data", "model"),
                      axis_types=(AxisType.Auto,) * 2)
+
+
+def make_data_mesh(num_devices: int | None = None) -> Mesh:
+    """1-D ``data`` mesh over the first ``num_devices`` local devices (default:
+    all) — the serving mesh for `FigaroEngine`'s ``shard=`` batched dispatch
+    and `distributed_postprocess_r0`. Any device count works; the butterfly
+    combine pads non-power-of-two axes."""
+    devs = jax.devices()
+    n = len(devs) if num_devices is None else num_devices
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"num_devices={n} outside [1, {len(devs)}]")
+    return make_mesh((n,), ("data",), axis_types=(AxisType.Auto,),
+                     devices=devs[:n])

@@ -34,9 +34,12 @@ __all__ = ["make_prefill", "make_decode_step", "cache_specs", "sample_loop",
 
 
 def make_figaro_server(plan: FigaroPlan, *, kind: str = "qr",
-                       label_col: int | None = None,
+                       label_col: int | None = None, k: int | None = None,
+                       ridge: float = 0.0,
                        dtype=jnp.float32, method: str = "tsqr",
-                       leaf_rows: int = 256, engine: FigaroEngine | None = None):
+                       leaf_rows: int = 256,
+                       engine: FigaroEngine | None = None,
+                       mesh: Mesh | None = None, shard_axis: str = "data"):
     """Batched FiGaRo serving endpoint for one join structure.
 
     Returns ``serve(data_batch)`` taking per-node [B, m_i, n_i] request
@@ -44,36 +47,44 @@ def make_figaro_server(plan: FigaroPlan, *, kind: str = "qr",
 
       kind="qr"   -> R      [B, N, N]
       kind="svd"  -> (s [B, N], Vt [B, N, N])
-      kind="lsq"  -> per-request (beta [N-1], residual) against ``label_col``
-                     (served per-sample through the engine's cached executable;
-                     the regression read itself is N×N and join-size-free)
+      kind="pca"  -> PCAResult with a leading batch axis (top-``k``)
+      kind="lsq"  -> (betas [B, N-1], residuals [B]) against ``label_col``
+
+    Every kind — lsq and pca included — answers the whole batch with ONE
+    cached executable launch (the engine's genuinely-batched vmapped bodies).
+    With a ``mesh``, the request-batch axis is additionally sharded over
+    ``mesh[shard_axis]`` via `shard_map`: one executable per (plan signature,
+    mesh signature) serves the global batch across all devices, with the
+    batch padded/bucketed to the axis size inside the engine.
 
     The engine donates request buffers (they are consumed by the dispatch that
     answers them) and compiles once per plan signature — subsequent batches,
     and other plans with the same signature, are launch-only.
     """
     engine = engine if engine is not None else FigaroEngine(donate_data=True)
+    shard = None if mesh is None else (mesh, shard_axis)
 
     if kind == "qr":
         def serve(data_batch):
-            return engine.qr(plan, data_batch, batched=True, dtype=dtype,
-                             method=method, leaf_rows=leaf_rows)
+            return engine.qr(plan, data_batch, batched=True, shard=shard,
+                             dtype=dtype, method=method, leaf_rows=leaf_rows)
     elif kind == "svd":
         def serve(data_batch):
-            return engine.svd(plan, data_batch, batched=True, dtype=dtype,
-                              method=method, leaf_rows=leaf_rows)
+            return engine.svd(plan, data_batch, batched=True, shard=shard,
+                              dtype=dtype, method=method, leaf_rows=leaf_rows)
+    elif kind == "pca":
+        def serve(data_batch):
+            return engine.pca(plan, data_batch, batched=True, shard=shard,
+                              k=k, dtype=dtype, method=method,
+                              leaf_rows=leaf_rows)
     elif kind == "lsq":
         if label_col is None:
             raise ValueError("kind='lsq' needs label_col")
 
         def serve(data_batch):
-            b = data_batch[0].shape[0]
-            out = [engine.least_squares(
-                plan, label_col, [d[i] for d in data_batch], dtype=dtype,
-                method=method, leaf_rows=leaf_rows) for i in range(b)]
-            betas = jnp.stack([o[0] for o in out])
-            resids = jnp.stack([o[1] for o in out])
-            return betas, resids
+            return engine.least_squares(
+                plan, label_col, data_batch, batched=True, shard=shard,
+                ridge=ridge, dtype=dtype, method=method, leaf_rows=leaf_rows)
     else:
         raise ValueError(f"unknown serve kind {kind!r}")
 

@@ -1,0 +1,185 @@
+"""Subprocess driver for the sharded serving + distributed combine tests.
+
+Run: ``PYTHONPATH=src python tests/_sharded_driver.py <num_devices>``.
+Invoked by test_sharding.py in a fresh process for non-power-of-two (3) and
+power-of-two (4) forced host device counts — the XLA device count must be
+pinned before jax initializes, so this cannot run in-process with the suite.
+
+Covers the acceptance criteria of the sharded-dispatch PR:
+  * sharded batched qr/svd/pca/least_squares match the per-sample engine
+    results (sign-normalized R comparison + Gram invariant), including a
+    batch size that does NOT divide the mesh (the pad/bucket path);
+  * trace counters: one compilation per (plan signature, mesh signature) —
+    repeat dispatches and bucketed batch sizes are launch-only, a sub-mesh
+    retraces;
+  * `butterfly_qr_combine` / `distributed_postprocess_r0` on a
+    non-power-of-two mesh axis;
+  * `partition_fact_table` with ``num_parts`` larger than the number of fact
+    key groups, and `partitioned_figaro_qr` dispatched through the mesh.
+"""
+
+import os
+import sys
+
+N_DEV = int(sys.argv[1]) if len(sys.argv) > 1 else 3
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={N_DEV}"
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.distributed import (distributed_postprocess_r0,  # noqa: E402
+                                    distributed_qr_r, partition_fact_table,
+                                    partitioned_figaro_qr)
+from repro.core.engine import FigaroEngine  # noqa: E402
+from repro.core.figaro import figaro_r0  # noqa: E402
+from repro.core.join_tree import JoinTree, build_plan  # noqa: E402
+from repro.core.materialize import materialize_join  # noqa: E402
+from repro.core.postprocess import normalize_sign  # noqa: E402
+from repro.core.relation import Database, full_reduce  # noqa: E402
+from repro.launch.mesh import make_data_mesh  # noqa: E402
+from repro.train.serve import make_figaro_server  # noqa: E402
+
+
+def star_tree(rng):
+    tables = {
+        "F": ({"a": rng.integers(0, 6, 40), "b": rng.integers(0, 4, 40)},
+              rng.normal(size=(40, 2)), ["f0", "f1"]),
+        "D1": ({"a": rng.integers(0, 6, 18)}, rng.normal(size=(18, 2)),
+               ["d0", "d1"]),
+        "D2": ({"b": rng.integers(0, 4, 12)}, rng.normal(size=(12, 1)),
+               ["e0"]),
+    }
+    db = Database.from_arrays(tables)
+    edges = [("F", "D1"), ("F", "D2")]
+    db = full_reduce(db, edges)
+    return JoinTree.from_edges(db, "F", edges)
+
+
+def check_sharded_serving(rng, mesh) -> None:
+    tree = star_tree(rng)
+    plan = build_plan(tree)
+    n = plan.num_cols
+    b = N_DEV + 2  # not a multiple of the mesh -> exercises the pad path
+    batch = tuple(
+        np.stack([rng.normal(size=np.asarray(d).shape) for _ in range(b)])
+        for d in plan.data)
+    engine = FigaroEngine(donate_data=False)
+    ref = FigaroEngine(donate_data=False)
+
+    # --- qr: values + Gram invariant + trace accounting ---------------------
+    rb = np.asarray(engine.qr(plan, batch, batched=True, shard=mesh,
+                              dtype=jnp.float64))
+    assert rb.shape == (b, n, n), rb.shape
+    assert engine.trace_count("qr_batched") == 1
+    for i in range(b):
+        ri = np.asarray(ref.qr(plan, [d[i] for d in batch],
+                               dtype=jnp.float64))
+        scale = max(np.abs(ri).max(), 1.0)
+        assert np.abs(rb[i] - ri).max() / scale < 1e-10, ("qr", i)
+        r0i = np.asarray(figaro_r0(plan, [d[i] for d in batch],
+                                   dtype=jnp.float64))
+        g = r0i.T @ r0i  # == A_iᵀA_i (tier-1-validated invariant)
+        gerr = np.abs(rb[i].T @ rb[i] - g).max() / max(np.abs(g).max(), 1e-30)
+        assert gerr < 1e-10, ("gram", i, gerr)
+
+    # Repeat dispatch and a bucketed smaller batch: launch-only.
+    engine.qr(plan, batch, batched=True, shard=mesh, dtype=jnp.float64)
+    engine.qr(plan, tuple(d[: b - 1] for d in batch), batched=True,
+              shard=mesh, dtype=jnp.float64)
+    assert engine.trace_count("qr_batched") == 1, "bucketed batch retraced"
+    # A sub-mesh is a new mesh signature -> exactly one more compilation.
+    if N_DEV > 1:
+        sub = make_data_mesh(N_DEV - 1)
+        engine.qr(plan, batch, batched=True, shard=sub, dtype=jnp.float64)
+        assert engine.trace_count("qr_batched") == 2, "mesh signature ignored"
+
+    # --- svd ----------------------------------------------------------------
+    s_b, vt_b = engine.svd(plan, batch, batched=True, shard=mesh,
+                           dtype=jnp.float64)
+    s_b, vt_b = np.asarray(s_b), np.asarray(vt_b)
+    for i in range(b):
+        s_i, vt_i = ref.svd(plan, [d[i] for d in batch], dtype=jnp.float64)
+        assert np.abs(s_b[i] - np.asarray(s_i)).max() < 1e-9, ("svd s", i)
+        # right-singular vectors match up to per-row sign
+        sgn = np.sign(np.sum(vt_b[i] * np.asarray(vt_i), axis=1))[:, None]
+        assert np.abs(vt_b[i] * sgn - np.asarray(vt_i)).max() < 1e-8, \
+            ("svd vt", i)
+
+    # --- pca / least_squares through the batched server ---------------------
+    serve_lsq = make_figaro_server(plan, kind="lsq", label_col=n - 1,
+                                   ridge=0.25, dtype=jnp.float64,
+                                   engine=engine, mesh=mesh)
+    betas, resids = serve_lsq(batch)
+    assert engine.trace_count("least_squares_batched") == 1
+    assert engine.trace_count("least_squares") == 0, \
+        "lsq server fell back to per-sample dispatch"
+    for i in range(b):
+        b_i, r_i = ref.least_squares(plan, n - 1, [d[i] for d in batch],
+                                     ridge=0.25, dtype=jnp.float64)
+        assert np.abs(np.asarray(betas[i]) - np.asarray(b_i)).max() < 1e-9
+        assert abs(float(resids[i]) - float(r_i)) < 1e-9
+
+    pca_b = engine.pca(plan, batch, batched=True, shard=mesh, k=3,
+                       dtype=jnp.float64)
+    ev = np.asarray(pca_b.explained_variance)
+    assert ev.shape == (b, 3) and (ev >= 0).all()
+    for i in range(b):
+        pca_i = ref.pca(plan, [d[i] for d in batch], k=3, dtype=jnp.float64)
+        assert np.abs(ev[i] - np.asarray(pca_i.explained_variance)).max() \
+            < 1e-9, ("pca ev", i)
+        assert np.abs(np.asarray(pca_b.mean[i])
+                      - np.asarray(pca_i.mean)).max() < 1e-10, ("pca mean", i)
+
+
+def check_distributed_combine(rng, mesh) -> None:
+    # Non-power-of-two (N_DEV=3) and power-of-two (N_DEV=4) butterfly.
+    x = jnp.array(rng.normal(size=(257, 9)))  # odd rows: shard padding too
+    r = np.asarray(normalize_sign(distributed_qr_r(x, mesh, "data")))
+    r_ref = np.asarray(normalize_sign(jnp.linalg.qr(x, mode="r")))
+    assert np.abs(r - r_ref).max() < 1e-10 * np.abs(r_ref).max()
+
+    tree = star_tree(rng)
+    plan = build_plan(tree)
+    a = materialize_join(tree)
+    r_ref = np.asarray(normalize_sign(jnp.linalg.qr(jnp.array(a), mode="r")))
+    r0 = figaro_r0(plan, dtype=jnp.float64)
+    r_dist = np.asarray(distributed_postprocess_r0(r0, mesh, "data"))
+    err = np.abs(r_dist - r_ref).max() / np.abs(r_ref).max()
+    assert err < 1e-10, ("distributed_postprocess_r0", err)
+
+
+def check_partitioned(rng, mesh) -> None:
+    tree = star_tree(rng)
+    a = materialize_join(tree)
+    r_ref = np.asarray(normalize_sign(jnp.linalg.qr(jnp.array(a), mode="r")))
+    m = tree.db["F"].num_rows
+
+    # num_parts far beyond the number of fact key groups: every group becomes
+    # (at most) its own partition, empties are dropped, nothing is lost.
+    parts = partition_fact_table(tree, 10 * m)
+    assert 0 < len(parts) <= 10 * m
+    assert sum(t.db["F"].num_rows for t in parts) == m
+
+    for num_parts in (N_DEV, 10 * m):
+        r = np.asarray(partitioned_figaro_qr(tree, num_parts, mesh=mesh))
+        err = np.abs(r - r_ref).max() / np.abs(r_ref).max()
+        assert err < 1e-10, ("partitioned_figaro_qr", num_parts, err)
+
+
+def main() -> None:
+    assert len(jax.devices()) == N_DEV, jax.devices()
+    rng = np.random.default_rng(7)
+    mesh = make_data_mesh()
+    assert mesh.shape["data"] == N_DEV
+    check_sharded_serving(rng, mesh)
+    check_distributed_combine(rng, mesh)
+    check_partitioned(rng, mesh)
+    print(f"SHARDED-OK {N_DEV}")
+
+
+if __name__ == "__main__":
+    main()

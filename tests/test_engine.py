@@ -210,3 +210,122 @@ def test_engine_svd_cartesian_edge():
     assert engine.trace_count("svd") == 1
     engine.svd(plan, dtype=jnp.float64)
     assert engine.trace_count("svd") == 1
+
+
+# -- genuinely-batched pca / least_squares ------------------------------------
+
+
+def test_engine_batched_least_squares_matches_per_sample(rng):
+    _, plan = _plan("star", rng)
+    label = plan.num_cols - 1
+    engine = FigaroEngine(donate_data=False)
+    batch = _batch(plan, rng, 3, np.float64)
+    betas, resids = engine.least_squares(plan, label, batch, batched=True,
+                                         ridge=0.4, dtype=jnp.float64)
+    assert engine.trace_count("least_squares_batched") == 1
+    for i in range(3):
+        b_i, r_i = engine.least_squares(plan, label, [d[i] for d in batch],
+                                        ridge=0.4, dtype=jnp.float64)
+        np.testing.assert_allclose(np.asarray(betas[i]), np.asarray(b_i),
+                                   atol=1e-10)
+        np.testing.assert_allclose(np.asarray(resids[i]), np.asarray(r_i),
+                                   atol=1e-10)
+
+
+def test_engine_batched_pca_matches_per_sample(rng):
+    _, plan = _plan("path", rng)
+    engine = FigaroEngine(donate_data=False)
+    batch = _batch(plan, rng, 3, np.float64)
+    res = engine.pca(plan, batch, batched=True, k=2, dtype=jnp.float64)
+    assert engine.trace_count("pca_batched") == 1
+    assert res.explained_variance.shape == (3, 2)
+    for i in range(3):
+        ref = engine.pca(plan, [d[i] for d in batch], k=2, dtype=jnp.float64)
+        np.testing.assert_allclose(
+            np.asarray(res.explained_variance[i]),
+            np.asarray(ref.explained_variance), atol=1e-10)
+        np.testing.assert_allclose(np.asarray(res.mean[i]),
+                                   np.asarray(ref.mean), atol=1e-12)
+
+
+def test_lsq_server_is_single_dispatch(rng):
+    """kind='lsq' must answer the whole batch through the batched executable,
+    never a per-sample Python loop of engine dispatches."""
+    from repro.train.serve import make_figaro_server
+
+    _, plan = _plan("star", rng)
+    engine = FigaroEngine(donate_data=False)
+    batch = _batch(plan, rng, 4, np.float64)
+    serve = make_figaro_server(plan, kind="lsq", label_col=plan.num_cols - 1,
+                               dtype=jnp.float64, engine=engine)
+    betas, resids = serve(batch)
+    assert betas.shape == (4, plan.num_cols - 1) and resids.shape == (4,)
+    assert engine.trace_count("least_squares_batched") == 1
+    assert engine.trace_count("least_squares") == 0
+    serve(batch)
+    assert engine.trace_count("least_squares_batched") == 1
+
+
+# -- regression: ridge residual & PCA eigenvalue clamp ------------------------
+
+
+def test_least_squares_ridge_residual_is_true_residual(rng):
+    """resid must be ‖Aβ − y‖ of the *ridge* solution — |rr[n-1,n-1]| alone
+    understates it for every regularized regression."""
+    tree, plan = _plan("path", rng)
+    a = np.asarray(materialize_join(tree))
+    n = plan.num_cols
+    if n < 2:
+        pytest.skip("needs >= 2 columns")
+    x, y = a[:, : n - 1], a[:, n - 1]
+    ridge = 0.7
+    beta_ref = np.linalg.solve(x.T @ x + ridge * np.eye(n - 1), x.T @ y)
+    resid_ref = np.linalg.norm(x @ beta_ref - y)
+    engine = FigaroEngine()
+    beta, resid = engine.least_squares(plan, n - 1, ridge=ridge,
+                                       dtype=jnp.float64)
+    np.testing.assert_allclose(np.asarray(beta), beta_ref, atol=1e-9)
+    np.testing.assert_allclose(float(resid), resid_ref, rtol=1e-9)
+
+
+def test_pca_explained_variance_nonnegative_near_constant_column(rng):
+    """The centered-Gram subtraction can leave tiny negative eigenvalues; the
+    engine must clamp them at 0 before the top-k select."""
+    _, plan = _plan("star", rng)
+    data = [np.array(d, dtype=np.float64, copy=True) for d in plan.data]
+    data[0][:, 0] = 1.0  # constant column over the join -> zero variance
+    engine = FigaroEngine()
+    res = engine.pca(plan.with_data(data), dtype=jnp.float64)
+    ev = np.asarray(res.explained_variance)
+    assert (ev >= 0.0).all(), ev
+    # descending order must survive the clamp
+    assert (np.diff(ev) <= 1e-12).all(), ev
+
+
+# -- sharded dispatch plumbing on the in-process (1-device) mesh --------------
+
+
+def test_sharded_dispatch_single_device_mesh(rng):
+    """shard= on a 1-device data mesh is the degenerate case of the sharded
+    serving layer: same results as the unsharded batched dispatch, separate
+    executable-cache entry (mesh signature), shard without batched rejected.
+    Real multi-device coverage lives in tests/_sharded_driver.py."""
+    from repro.launch.mesh import make_data_mesh
+
+    _, plan = _plan("star", rng)
+    engine = FigaroEngine(donate_data=False)
+    batch = _batch(plan, rng, 3, np.float64)
+    mesh = make_data_mesh()
+    r_plain = np.asarray(engine.qr(plan, batch, batched=True,
+                                   dtype=jnp.float64))
+    r_shard = np.asarray(engine.qr(plan, batch, batched=True, shard=mesh,
+                                   dtype=jnp.float64))
+    np.testing.assert_allclose(r_shard, r_plain, atol=1e-12)
+    assert engine.trace_count("qr_batched") == 2  # mesh vs None signatures
+    engine.qr(plan, batch, batched=True, shard=mesh, dtype=jnp.float64)
+    assert engine.trace_count("qr_batched") == 2
+    with pytest.raises(ValueError, match="batched"):
+        engine.qr(plan, [d[0] for d in batch], shard=mesh, dtype=jnp.float64)
+    with pytest.raises(ValueError, match="axis"):
+        engine.qr(plan, batch, batched=True, shard=(mesh, "model"),
+                  dtype=jnp.float64)

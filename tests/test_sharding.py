@@ -1,7 +1,17 @@
 """Sharding rules: production-mesh PartitionSpecs are consistent & complete.
 
 Uses AbstractMesh — spec construction must not require 256 real devices.
+
+The sharded *serving* tests (FigaroEngine ``shard=`` dispatch, the butterfly
+combine, mesh-dispatched partitioned QR) need real multi-device meshes, so
+they run ``tests/_sharded_driver.py`` in a fresh subprocess with the XLA host
+device count forced to 3 (non-power-of-two) and 4 — the flag must be set
+before jax initializes.
 """
+
+import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +22,23 @@ from repro.compat import AxisType, make_abstract_mesh
 from repro.configs import ARCH_NAMES, get_config
 from repro.models import transformer as tf
 from repro.sharding.rules import data_axes, param_specs
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("n", [3, 4])
+def test_sharded_serving_multi_device(n):
+    """Sharded batched dispatch + distributed combines on a forced n-device
+    CPU mesh (n=3 exercises the non-power-of-two butterfly schedule)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)  # the driver pins its own device count
+    out = subprocess.run(
+        [sys.executable, os.path.join("tests", "_sharded_driver.py"), str(n)],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert f"SHARDED-OK {n}" in out.stdout
 
 
 def _abstract_mesh(multi_pod=False):
