@@ -16,6 +16,9 @@ Three comparisons, all on the paper-style schemas:
     1-wide and the ratio is ~1; run under
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to measure a real
     mesh split.
+  * **plan_refresh**: serving latency of an append-only data refresh — a
+    capacity plan (`plan_cache.refresh_plan`, zero retraces asserted) vs
+    rebuilding the exact plan and recompiling its fresh signature.
 
 Emits the standard ``BENCH_engine.json`` (see `_util.write_bench_json`) so the
 perf trajectory tracks this PR onward.
@@ -24,6 +27,7 @@ perf trajectory tracks this PR onward.
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +40,7 @@ from repro.core.heads_tails import segmented_head_tail
 from repro.core.join_tree import build_plan
 from repro.data.relational import favorita_like, yelp_like
 
-from ._util import Csv, timeit, write_bench_json
+from ._util import Csv, block, timeit, write_bench_json
 
 
 def _scatter_r0(plan, data, *, dtype=jnp.float64):
@@ -168,6 +172,45 @@ def run(csv: Csv, *, fast: bool = False) -> None:
         add(case, "mesh_s", t_shard)
         add(case, "speedup", t_batch / t_shard)
         add(case, "traces_qr_batched_total", engine.trace_count("qr_batched"))
+
+        # -- append-only refresh: capacity plan vs rebuild-and-recompile ----
+        # Serving cost of a data append. Capacity path: host re-ingest + pad
+        # (refresh_plan) + a launch-only dispatch of the cached executable.
+        # Naive path: build_plan + a dispatch that must compile the fresh
+        # exact signature (measured once — that's the point).
+        from repro.core.plan_cache import build_capacity_plan, refresh_plan
+
+        cap = build_capacity_plan(tree, headroom=64)
+        cap_engine = FigaroEngine(donate_data=False)
+        block(cap_engine.qr(cap, dtype=jnp.float64))  # compile once up front
+        fact = tree.preorder()[0]
+        rel = cap.source_tree.db[fact]
+        new_rows = ({a: rel.key_col(a)[:8].copy() for a in rel.key_attrs},
+                    rng.normal(size=(8, rel.num_data_cols)))
+
+        t0 = time.perf_counter()
+        refreshed = refresh_plan(cap, {fact: new_rows})
+        t_refresh_host = time.perf_counter() - t0
+        traces_before = cap_engine.trace_count("qr")
+        t_refresh_serve = timeit(
+            lambda: cap_engine.qr(refreshed, dtype=jnp.float64))
+        assert cap_engine.trace_count("qr") == traces_before  # zero retraces
+
+        t0 = time.perf_counter()
+        rebuilt = build_plan(refreshed.source_tree)
+        fresh_engine = FigaroEngine(donate_data=False)
+        block(fresh_engine.qr(rebuilt, dtype=jnp.float64))  # incl. compile
+        t_rebuild = time.perf_counter() - t0
+
+        case = f"{name}:plan_refresh"
+        add(case, "appended_rows", 8)
+        add(case, "refresh_host_s", t_refresh_host)
+        add(case, "refresh_serve_s", t_refresh_serve)
+        add(case, "rebuild_recompile_s", t_rebuild)
+        add(case, "speedup",
+            t_rebuild / (t_refresh_host + t_refresh_serve))
+        add(case, "retraces_after_refresh",
+            cap_engine.trace_count("qr") - traces_before)
 
     write_bench_json("engine", rows)
 

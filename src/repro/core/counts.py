@@ -13,8 +13,15 @@ the whole thing jits and differentiates away on TPU with zero synchronization.
 
 Counts can exceed 2^31 quickly (they multiply along the tree), so they are
 computed in floating point of a configurable dtype; sqrt of the counts is what
-FiGaRo actually consumes. A numpy int64 reference lives in
+FiGaRo actually consumes. The default is float64: float32 is exact only up to
+2^24, beyond which the full-join sizes round and ``phi_circ`` (= full / rpk)
+silently corrupts the emission scaling. A numpy int64 reference lives in
 `compute_counts_reference` for exactness tests.
+
+Capacity-padded (masked) plans — see `repro.core.plan_cache` — carry group
+slots with ``group_count == 0``; their counts are identically zero, and every
+division below is guarded so 0/0 resolves to 0 instead of NaN. For exact plans
+all denominators are >= 1, so the guards are value-neutral.
 """
 
 from __future__ import annotations
@@ -32,7 +39,13 @@ class NodeCounts(dict):
     """Per-node aggregate bundle: keys rpk, theta_down, phi_down, full, phi_up, phi_circ."""
 
 
-def compute_counts(plan: FigaroPlan, dtype=jnp.float32) -> list[NodeCounts]:
+def _safe_div(num: jnp.ndarray, den: jnp.ndarray) -> jnp.ndarray:
+    """``num / den`` with 0/0 -> 0 (dead capacity slots of masked plans)."""
+    ok = den > 0
+    return jnp.where(ok, num / jnp.where(ok, den, 1), jnp.zeros((), num.dtype))
+
+
+def compute_counts(plan: FigaroPlan, dtype=jnp.float64) -> list[NodeCounts]:
     """Algorithm 1, jitted-friendly. Returns one `NodeCounts` per node index.
 
     Reads the static sizes off ``plan.spec`` and the (possibly traced) index
@@ -66,12 +79,12 @@ def compute_counts(plan: FigaroPlan, dtype=jnp.float32) -> list[NodeCounts]:
         else:
             full = out[idx]["theta_down"]
         out[idx]["full"] = full
-        out[idx]["phi_circ"] = full / out[idx]["rpk"]
+        out[idx]["phi_circ"] = _safe_div(full, out[idx]["rpk"])
         for ch in sp.children:
             lookup = jnp.asarray(ix.child_lookup[ch])
             full_ij = jax.ops.segment_sum(full, lookup,
                                           num_segments=spec.nodes[ch].P)
-            out[ch]["phi_up"] = full_ij / out[ch]["phi_down"]
+            out[ch]["phi_up"] = _safe_div(full_ij, out[ch]["phi_down"])
 
     return out
 

@@ -27,6 +27,14 @@ pytree argument:
     padded bucket share one executable. The executable cache keys on the mesh
     signature as well as the plan signature.
 
+  * ``bucket=True`` rounds the plan's static sizes up to powers of two
+    (`repro.core.plan_cache`) before dispatching, so plans that differ only
+    within one bucket land on the same cached executable — this is what
+    bounds the compile count under heavy multi-tenant load. Capacity plans
+    built with `plan_cache.build_capacity_plan` / refreshed with
+    `plan_cache.refresh_plan` dispatch the same way without any per-call
+    padding: an append that keeps the bucketed signature is retrace-free.
+
 Trace counts are tracked per pipeline kind (`trace_count`) so tests and
 benchmarks can assert cache hits instead of guessing.
 """
@@ -48,9 +56,22 @@ from repro.compat import shard_map
 from .counts import compute_counts
 from .figaro import figaro_r0
 from .join_tree import FigaroPlan, JoinTree, build_plan
+from .plan_cache import bucket_spec, pad_data, pad_plan
 from .postprocess import postprocess_r0
 
 __all__ = ["FigaroEngine", "PCAResult", "default_engine"]
+
+
+def _bucketize(plan: FigaroPlan, data):
+    """Pad an exact plan (and its data) into its power-of-two buckets so
+    near-miss shapes share an executable; capacity plans pass through."""
+    if any(ix.row_mask is not None for ix in plan.index):
+        return plan, data  # already capacity-padded (its spec IS the bucket)
+    cap = bucket_spec(plan.spec)
+    padded = pad_plan(plan, cap)
+    if data is not None:
+        data = pad_data(data, cap)
+    return padded, data
 
 
 @jax.tree_util.register_dataclass
@@ -73,6 +94,8 @@ def _column_moments(plan: FigaroPlan, data, dtype):
     parts = []
     for sp, ix, d in zip(plan.spec.nodes, plan.index, data):
         w = counts[sp.idx]["phi_circ"][jnp.asarray(ix.row_to_group)]
+        if ix.row_mask is not None:  # capacity plan: dead rows weigh nothing
+            w = w * jnp.asarray(ix.row_mask, dtype)
         parts.append(w @ jnp.asarray(d, dtype))
     sums = jnp.concatenate(parts)
     total = counts[plan.spec.root]["full"].sum()
@@ -167,7 +190,9 @@ class FigaroEngine:
                        donate_argnums=(1,) if donate else ())
 
     def _dispatch(self, kind: str, plan: FigaroPlan, data, *, shard=None,
-                  **options):
+                  bucket: bool = False, **options):
+        if bucket:
+            plan, data = _bucketize(plan, data)
         mesh, axis = self._normalize_shard(shard)
         if mesh is not None and not kind.endswith("_batched"):
             raise ValueError(
@@ -192,7 +217,11 @@ class FigaroEngine:
             p = mesh.shape[axis]
             b = int(data[0].shape[0])
             if b == 0:
-                raise ValueError("sharded dispatch needs a non-empty batch")
+                # Nothing to shard — the pad-by-repeating-the-trailing-request
+                # bucketing would index an empty batch out of range. Answer
+                # through the unsharded batched executable, which vmaps over
+                # the empty axis and returns correctly-shaped empty results.
+                return self._dispatch(kind, plan, data, **options)
             pad = -(-b // p) * p - b
             if pad:
                 # Bucket the batch to a multiple of the mesh axis by repeating
@@ -344,60 +373,70 @@ class FigaroEngine:
     # -- public API ----------------------------------------------------------
 
     def r0(self, plan: FigaroPlan, data=None, *, batched: bool = False,
-           shard=None, dtype=jnp.float32,
+           shard=None, bucket: bool = False, dtype=jnp.float32,
            use_kernel: bool = False) -> jnp.ndarray:
         """R₀ of Algorithm 2; ``batched`` expects [B, m_i, n_i] data leaves.
 
         ``shard`` (a `Mesh` or ``(mesh, axis)``; requires ``batched=True``)
         splits the batch axis over the mesh — one executable per
         (plan signature, mesh signature) answers the global batch.
+
+        ``bucket=True`` pads the plan (and data rows) to its power-of-two
+        capacities first, so near-miss plan shapes share one executable; R₀
+        then carries extra all-zero rows at the capacity layout. Long-lived
+        callers should hold a `plan_cache.build_capacity_plan` plan instead
+        (same executables, no per-dispatch host padding).
         """
         return self._dispatch("r0_batched" if batched else "r0", plan, data,
-                              shard=shard, dtype=self._canon(dtype),
+                              shard=shard, bucket=bucket,
+                              dtype=self._canon(dtype),
                               use_kernel=use_kernel)
 
     def qr(self, plan: FigaroPlan, data=None, *, batched: bool = False,
-           shard=None, dtype=jnp.float32, method: str = "tsqr",
-           leaf_rows: int = 256, panel: int = 32,
+           shard=None, bucket: bool = False, dtype=jnp.float32,
+           method: str = "tsqr", leaf_rows: int = 256, panel: int = 32,
            use_kernel: bool = False) -> jnp.ndarray:
         """Upper-triangular R of the join's QR ([B, N, N] when batched)."""
         return self._dispatch(
             "qr_batched" if batched else "qr", plan, data, shard=shard,
-            dtype=self._canon(dtype), method=method, leaf_rows=leaf_rows,
-            panel=panel, use_kernel=use_kernel)
+            bucket=bucket, dtype=self._canon(dtype), method=method,
+            leaf_rows=leaf_rows, panel=panel, use_kernel=use_kernel)
 
     def svd(self, plan: FigaroPlan, data=None, *, batched: bool = False,
-            shard=None, dtype=jnp.float64, method: str = "tsqr",
-            leaf_rows: int = 256, panel: int = 32, use_kernel: bool = False):
+            shard=None, bucket: bool = False, dtype=jnp.float64,
+            method: str = "tsqr", leaf_rows: int = 256, panel: int = 32,
+            use_kernel: bool = False):
         """Singular values + right-singular vectors of the join matrix."""
         return self._dispatch(
             "svd_batched" if batched else "svd", plan, data, shard=shard,
-            dtype=self._canon(dtype), method=method, leaf_rows=leaf_rows,
-            panel=panel, use_kernel=use_kernel)
+            bucket=bucket, dtype=self._canon(dtype), method=method,
+            leaf_rows=leaf_rows, panel=panel, use_kernel=use_kernel)
 
     def pca(self, plan: FigaroPlan, data=None, *, batched: bool = False,
-            shard=None, k: int | None = None, center: bool = True,
-            dtype=jnp.float64, method: str = "tsqr", leaf_rows: int = 256,
-            panel: int = 32, use_kernel: bool = False) -> PCAResult:
+            shard=None, bucket: bool = False, k: int | None = None,
+            center: bool = True, dtype=jnp.float64, method: str = "tsqr",
+            leaf_rows: int = 256, panel: int = 32,
+            use_kernel: bool = False) -> PCAResult:
         """PCA of the join matrix from R (+ factorized means when centering)."""
         n = plan.spec.num_cols
         k = n if k is None else min(k, n)
         return self._dispatch(
             "pca_batched" if batched else "pca", plan, data, shard=shard,
-            k=k, center=center, dtype=self._canon(dtype), method=method,
-            leaf_rows=leaf_rows, panel=panel, use_kernel=use_kernel)
+            bucket=bucket, k=k, center=center, dtype=self._canon(dtype),
+            method=method, leaf_rows=leaf_rows, panel=panel,
+            use_kernel=use_kernel)
 
     def least_squares(self, plan: FigaroPlan, label_col: int, data=None, *,
-                      batched: bool = False, shard=None, ridge: float = 0.0,
-                      dtype=jnp.float64, method: str = "tsqr",
-                      leaf_rows: int = 256, panel: int = 32,
-                      use_kernel: bool = False):
+                      batched: bool = False, shard=None, bucket: bool = False,
+                      ridge: float = 0.0, dtype=jnp.float64,
+                      method: str = "tsqr", leaf_rows: int = 256,
+                      panel: int = 32, use_kernel: bool = False):
         """argmin_β ‖A[:, feats]·β − A[:, label]‖² over the unmaterialized join."""
         return self._dispatch(
             "least_squares_batched" if batched else "least_squares", plan,
-            data, shard=shard, label_col=label_col, ridge=float(ridge),
-            dtype=self._canon(dtype), method=method, leaf_rows=leaf_rows,
-            panel=panel, use_kernel=use_kernel)
+            data, shard=shard, bucket=bucket, label_col=label_col,
+            ridge=float(ridge), dtype=self._canon(dtype), method=method,
+            leaf_rows=leaf_rows, panel=panel, use_kernel=use_kernel)
 
 
 _DEFAULT_ENGINE: FigaroEngine | None = None

@@ -30,6 +30,12 @@ the concatenation of column-padded row slabs in emission order — no
 ``zeros().at[].set`` scatters on the hot path, and the carried `Data` matrix of
 an inner node is likewise a pure concatenation (its child blocks are
 column-contiguous by the preorder layout).
+
+Capacity-padded plans (`repro.core.plan_cache`): when a node carries a
+``row_mask``, the static shapes above are *capacities* and the mask is the
+weight vector of every row-level Givens sequence — dead rows contribute
+nothing (weight 0, data zeroed) and the corresponding R₀ rows are exactly
+zero, so the same executable serves every live size up to capacity.
 """
 
 from __future__ import annotations
@@ -85,10 +91,20 @@ def figaro_r0(
         x = data[idx]
 
         # --- HEADS_AND_TAILS (lines 11-16) --------------------------------
-        ones = jnp.ones((sp.m,), dtype=dtype)
+        # Capacity-padded plans weight the Givens sequences by the live-row
+        # mask: dead rows carry weight 0 (they neither move the prefix sums
+        # nor receive a tail) and their data is zeroed so the padded slab rows
+        # of R₀ come out identically zero. Dead rows are never segment starts
+        # (plan_cache appends them to the last live group), so every division
+        # inside segmented_head_tail stays well-posed.
+        if ix.row_mask is not None:
+            weights = jnp.asarray(ix.row_mask, dtype=dtype)
+            x = x * weights[:, None]
+        else:
+            weights = jnp.ones((sp.m,), dtype=dtype)
         heads, tails, _ = segmented_head_tail(
-            x, ones, jnp.asarray(ix.row_to_group), jnp.asarray(ix.pos_in_group),
-            sp.K, use_kernel=use_kernel)
+            x, weights, jnp.asarray(ix.row_to_group),
+            jnp.asarray(ix.pos_in_group), sp.K, use_kernel=use_kernel)
         phi_circ_row = cnt["phi_circ"][jnp.asarray(ix.row_to_group)]
         emit(sp.col_start, tails * jnp.sqrt(phi_circ_row)[:, None])
 

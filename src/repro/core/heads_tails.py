@@ -41,7 +41,9 @@ def head(a: jnp.ndarray, v: jnp.ndarray | None = None) -> jnp.ndarray:
     a = jnp.asarray(a)
     if v is None:
         return jnp.sum(a, axis=0) / jnp.sqrt(a.shape[0])
-    v = jnp.asarray(v)
+    # Cast the weights to the data dtype (as `tail` does): a float64 weight
+    # vector must not silently upcast low-precision (bf16/f16/f32) data.
+    v = jnp.asarray(v, dtype=a.dtype)
     return (v @ a) / jnp.linalg.norm(v)
 
 

@@ -202,6 +202,16 @@ class NodeIndex:
     Built as numpy int32 at ingest; they cross the jit boundary as arguments,
     so gathers/segment-reductions trace against them without recompilation
     when only their *values* change (same-shape plan => cache hit).
+
+    Capacity vs live size: for a *capacity-padded* plan (see
+    `repro.core.plan_cache`) the static ``NodeSpec`` sizes are bucketed
+    **capacities** and the live row/group/pgroup counts are dynamic — encoded
+    here as ``row_mask`` (1.0 for live rows, 0.0 for padding) plus zeroed
+    ``group_count`` entries for dead group slots. Appending rows only rewrites
+    these leaf *values*, so a refresh with unchanged capacities re-dispatches
+    the cached executable with zero retraces. ``row_mask is None`` marks an
+    exact (unpadded) plan; the treedef difference keeps the two paths in
+    separate executables.
     """
 
     # Row-level structure (all [m]).
@@ -217,6 +227,9 @@ class NodeIndex:
     pgroup_count: np.ndarray  # [P] (# groups per pgroup)
     # Child lookups: child idx -> [K] index into that child's P-table.
     child_lookup: dict[int, np.ndarray]
+    # Live-row mask [m] (float, 1.0 live / 0.0 dead) for capacity-padded
+    # plans; None for exact plans.
+    row_mask: np.ndarray | None = None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -25,12 +25,81 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.engine import FigaroEngine
 from repro.core.join_tree import FigaroPlan
+from repro.core.plan_cache import pad_data, refresh_plan
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
 from repro.sharding.rules import data_axes
 
 __all__ = ["make_prefill", "make_decode_step", "cache_specs", "sample_loop",
-           "make_figaro_server"]
+           "make_figaro_server", "FigaroServer"]
+
+
+class FigaroServer:
+    """Callable serving endpoint for one join structure, with an online
+    append path when the plan is a capacity plan.
+
+    ``server(data_batch)`` answers B requests per dispatch (see
+    `make_figaro_server`). ``server.append(node, rows)`` appends rows to one
+    relation (``rows = (key_columns, data_rows)`` as in
+    `plan_cache.refresh_plan`) and swaps in the refreshed plan: as long as
+    the new live sizes fit the plan's bucketed capacities, the next dispatch
+    reuses the cached executable — zero retraces under streaming appends.
+
+    Capacity contract for requests: batch leaves are [B, rows_i, n_i] in the
+    plan's (sorted) row order with ``rows_i`` either the node's live size or
+    its full capacity; live-sized leaves are zero-padded up to capacity here
+    (the dead rows are masked out inside the pipeline regardless).
+    """
+
+    def __init__(self, plan: FigaroPlan, dispatch):
+        self._plan = plan
+        self._dispatch = dispatch
+
+    @property
+    def plan(self) -> FigaroPlan:
+        """The currently-served plan (replaced by `append`)."""
+        return self._plan
+
+    def __call__(self, data_batch):
+        if any(ix.row_mask is not None for ix in self._plan.index):
+            data_batch = self._pad_requests(data_batch)
+        return self._dispatch(self._plan, data_batch)
+
+    def _pad_requests(self, data_batch):
+        """Zero-pad live-sized request leaves up to capacity.
+
+        Exactly live-sized or exactly capacity-sized leaves are accepted;
+        anything else raises — silently zero-filling a stale-sized batch
+        (e.g. one built for the live sizes *before* an `append`) would treat
+        the missing rows as all-zero features and corrupt the answer. Leaves
+        already at capacity pass through untouched (no host round trip on
+        the hot serving path).
+        """
+        data_batch = tuple(data_batch)
+        sizes = [(int(ix.row_mask.sum()) if ix.row_mask is not None else sp.m,
+                  sp) for sp, ix in zip(self._plan.spec.nodes,
+                                        self._plan.index)]
+        if all(d.shape[-2] == sp.m for d, (_, sp) in zip(data_batch, sizes)):
+            return data_batch  # already capacity-shaped
+        for d, (live, sp) in zip(data_batch, sizes):
+            if d.shape[-2] not in (live, sp.m):
+                raise ValueError(
+                    f"{sp.name}: request batch has {d.shape[-2]} rows; "
+                    f"expected the live size ({live}) or the capacity "
+                    f"({sp.m}) — rebuild request buffers after append()")
+        return pad_data(data_batch, self._plan.spec)
+
+    def append(self, node: str, rows) -> bool:
+        """Append ``rows = (key_columns, data_rows)`` to relation ``node``.
+
+        Returns True when the refresh stayed within the plan's capacities
+        (same signature — the next dispatch is launch-only) and False when
+        the capacities grew (one recompile on the next dispatch).
+        """
+        new_plan = refresh_plan(self._plan, {node: rows})
+        same_signature = new_plan.spec == self._plan.spec
+        self._plan = new_plan
+        return same_signature
 
 
 def make_figaro_server(plan: FigaroPlan, *, kind: str = "qr",
@@ -42,8 +111,8 @@ def make_figaro_server(plan: FigaroPlan, *, kind: str = "qr",
                        mesh: Mesh | None = None, shard_axis: str = "data"):
     """Batched FiGaRo serving endpoint for one join structure.
 
-    Returns ``serve(data_batch)`` taking per-node [B, m_i, n_i] request
-    buffers and answering B requests per dispatch:
+    Returns a `FigaroServer` — ``server(data_batch)`` takes per-node
+    [B, m_i, n_i] request buffers and answers B requests per dispatch:
 
       kind="qr"   -> R      [B, N, N]
       kind="svd"  -> (s [B, N], Vt [B, N, N])
@@ -57,6 +126,10 @@ def make_figaro_server(plan: FigaroPlan, *, kind: str = "qr",
     mesh signature) serves the global batch across all devices, with the
     batch padded/bucketed to the axis size inside the engine.
 
+    With a capacity plan (`plan_cache.build_capacity_plan`) the server also
+    exposes ``server.append(node, rows)`` for online data refreshes; appends
+    that keep the bucketed signature never retrace.
+
     The engine donates request buffers (they are consumed by the dispatch that
     answers them) and compiles once per plan signature — subsequent batches,
     and other plans with the same signature, are launch-only.
@@ -65,15 +138,15 @@ def make_figaro_server(plan: FigaroPlan, *, kind: str = "qr",
     shard = None if mesh is None else (mesh, shard_axis)
 
     if kind == "qr":
-        def serve(data_batch):
+        def dispatch(plan, data_batch):
             return engine.qr(plan, data_batch, batched=True, shard=shard,
                              dtype=dtype, method=method, leaf_rows=leaf_rows)
     elif kind == "svd":
-        def serve(data_batch):
+        def dispatch(plan, data_batch):
             return engine.svd(plan, data_batch, batched=True, shard=shard,
                               dtype=dtype, method=method, leaf_rows=leaf_rows)
     elif kind == "pca":
-        def serve(data_batch):
+        def dispatch(plan, data_batch):
             return engine.pca(plan, data_batch, batched=True, shard=shard,
                               k=k, dtype=dtype, method=method,
                               leaf_rows=leaf_rows)
@@ -81,14 +154,14 @@ def make_figaro_server(plan: FigaroPlan, *, kind: str = "qr",
         if label_col is None:
             raise ValueError("kind='lsq' needs label_col")
 
-        def serve(data_batch):
+        def dispatch(plan, data_batch):
             return engine.least_squares(
                 plan, label_col, data_batch, batched=True, shard=shard,
                 ridge=ridge, dtype=dtype, method=method, leaf_rows=leaf_rows)
     else:
         raise ValueError(f"unknown serve kind {kind!r}")
 
-    return serve
+    return FigaroServer(plan, dispatch)
 
 
 def make_prefill(cfg: ModelConfig, max_len: int):

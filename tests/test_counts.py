@@ -62,6 +62,33 @@ def test_two_pass_structure():
         seen.add(idx)
 
 
+def test_counts_default_dtype_exact_above_2pow24():
+    """Counts multiply along the tree and cross 2^24 fast; the float32
+    default used to round them there (corrupting phi_circ's scaling). The
+    float64 default must reproduce the int64 reference exactly."""
+    from repro.data.relational import cartesian as cartesian_tree
+    from repro.core.join_tree import build_plan
+
+    # |join| = 5001 * 3355 = 16_778_355 > 2^24, and odd — not representable
+    # in float32, so the old default provably corrupted it.
+    tree = cartesian_tree(5001, 3355, n1=1, n2=1, seed=0)
+    plan = build_plan(tree)
+    cr = compute_counts_reference(plan)
+    root = plan.preorder[0]
+    full = int(cr[root]["full"].sum())
+    assert full > 2**24 and int(np.float32(full)) != full
+
+    cj = compute_counts(plan)  # default dtype — must be exact
+    for i in range(len(plan.nodes)):
+        for k in ("rpk", "theta_down", "full", "phi_circ"):
+            np.testing.assert_array_equal(np.asarray(cj[i][k]), cr[i][k],
+                                          err_msg=f"node{i}:{k}")
+
+    # the regression the default guards against: float32 rounds `full`
+    c32 = compute_counts(plan, dtype=jnp.float32)
+    assert int(np.asarray(c32[root]["full"]).sum()) != full
+
+
 @settings(max_examples=25, deadline=None)
 @given(topology=st.sampled_from(list(TOPOLOGIES)), seed=st.integers(0, 2**31),
        cartesian=st.booleans())

@@ -329,3 +329,39 @@ def test_sharded_dispatch_single_device_mesh(rng):
     with pytest.raises(ValueError, match="axis"):
         engine.qr(plan, batch, batched=True, shard=(mesh, "model"),
                   dtype=jnp.float64)
+
+
+def test_sharded_dispatch_empty_batch(rng):
+    """B=0: the pad-by-repeating-the-trailing-request bucketing would index
+    an empty batch out of range — the engine must return correctly-shaped
+    empty results instead."""
+    from repro.launch.mesh import make_data_mesh
+
+    _, plan = _plan("star", rng)
+    engine = FigaroEngine(donate_data=False)
+    mesh = make_data_mesh()
+    n = plan.num_cols
+    empty = tuple(np.zeros((0,) + np.asarray(d).shape, np.float64)
+                  for d in plan.data)
+    r = engine.qr(plan, empty, batched=True, shard=mesh, dtype=jnp.float64)
+    assert np.asarray(r).shape == (0, n, n)
+    betas, resids = engine.least_squares(plan, n - 1, empty, batched=True,
+                                         shard=mesh, dtype=jnp.float64)
+    assert np.asarray(betas).shape == (0, n - 1)
+    assert np.asarray(resids).shape == (0,)
+
+
+def test_sharded_dispatch_single_request_batch(rng):
+    """B=1 (the smallest bucketable batch) matches the unsharded dispatch."""
+    from repro.launch.mesh import make_data_mesh
+
+    _, plan = _plan("star", rng)
+    engine = FigaroEngine(donate_data=False)
+    mesh = make_data_mesh()
+    batch = _batch(plan, rng, 1, np.float64)
+    r_shard = np.asarray(engine.qr(plan, batch, batched=True, shard=mesh,
+                                   dtype=jnp.float64))
+    r_plain = np.asarray(engine.qr(plan, [d[0] for d in batch],
+                                   dtype=jnp.float64))
+    assert r_shard.shape[0] == 1
+    np.testing.assert_allclose(r_shard[0], r_plain, atol=1e-12)

@@ -80,6 +80,20 @@ def test_lemma37_scaling(rng):
                                k * np.asarray(tail(a, v)), rtol=1e-12)
 
 
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float16, jnp.float32,
+                                   jnp.float64])
+def test_head_tail_preserve_dtype(rng, dtype):
+    """Mirrors the normalize_sign dtype test: the weight vector is cast to
+    the data dtype, so a float64 v must not silently upcast low-precision
+    (bf16/f16/f32) data through `head` (tail already cast)."""
+    a = jnp.asarray(_rand(rng, 6, 3), dtype=dtype)
+    v = jnp.asarray(rng.uniform(0.5, 2.0, size=6))  # float64 weights
+    h = head(a, v)
+    t = tail(a, v)
+    assert h.dtype == dtype, (h.dtype, dtype)
+    assert t.dtype == dtype, (t.dtype, dtype)
+
+
 # -- property test: the transform is orthogonal for arbitrary inputs ---------
 
 

@@ -53,6 +53,45 @@ def test_head_tail_kernel_integrated(rng):
     np.testing.assert_allclose(np.asarray(n1), np.asarray(n2), rtol=1e-6)
 
 
+@pytest.mark.parametrize("m,block_rows", [(65, 64), (129, 64), (237, 32),
+                                          (100, 64)])
+def test_segmented_tail_rows_straddle_block_boundary(rng, m, block_rows):
+    """`m` not a multiple of `block_rows`, with segments crossing every row
+    block: the kernel's carried-prefix path (interpret mode) must agree with
+    the XLA associative-scan path row for row."""
+    from repro.core.heads_tails import segmented_cumsum
+
+    n = 24
+    data = jnp.array(rng.normal(size=(m, n)), jnp.float32)
+    w = jnp.array(rng.uniform(0.5, 2.0, size=m), jnp.float32)
+    # long segments (~1.5 blocks) so nearly every block boundary falls inside
+    # a segment, plus a trailing remnant segment in the partial block
+    bounds = list(range(0, m, max(3 * block_rows // 2, 2))) + [m]
+    pos = np.concatenate([np.arange(b - a) for a, b in zip(bounds, bounds[1:])])
+    first = (pos == 0).astype(np.float32)
+    assert any(f == 0 and (i % block_rows) == 0 for i, f in enumerate(first)
+               if i), "no segment straddles a block boundary"
+
+    w2 = w * w
+    wa = data * w[:, None]
+    c_incl = segmented_cumsum(w2, jnp.array(first, bool))
+    c_excl = c_incl - w2
+    c_excl_safe = jnp.where(jnp.array(pos) > 0, c_excl, 1.0)
+    coef_a = jnp.sqrt(c_excl_safe / c_incl)
+    coef_b = -w / jnp.sqrt(c_excl_safe * c_incl)
+
+    out_kernel = ht_ops.segmented_tail(
+        data, wa, jnp.array(first), coef_a, coef_b,
+        block_rows=block_rows, block_cols=128)
+    # XLA associative-scan path: same coefficients applied to the segmented
+    # exclusive prefix sum (this is segmented_head_tail's non-kernel branch)
+    s_excl = segmented_cumsum(wa, jnp.array(first, bool)) - wa
+    out_xla = coef_a[:, None] * data + coef_b[:, None] * s_excl
+    live = np.asarray(pos) > 0  # rows at segment starts are garbage by spec
+    err = np.abs(np.asarray(out_kernel)[live] - np.asarray(out_xla)[live]).max()
+    assert err < 1e-4, err
+
+
 def test_head_tail_kernel_single_row_segments(rng):
     """Degenerate case: every row its own segment -> all tails zero."""
     m, n = 16, 8

@@ -1,0 +1,301 @@
+"""Plan lifecycle: bucketed signatures, capacity padding, append refreshes.
+
+Acceptance criteria (ISSUE 3): an append that keeps the bucketed signature
+triggers ZERO new traces; two plans differing only within one bucket share a
+cached executable; masked QR/SVD/PCA off a capacity plan match a fresh
+`build_plan` over the appended data to 1e-10 in float64.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.counts import compute_counts, compute_counts_reference
+from repro.core.engine import FigaroEngine
+from repro.core.figaro import figaro_r0
+from repro.core.join_tree import JoinTree, build_plan
+from repro.core.materialize import materialize_join
+from repro.core.plan_cache import (bucket_spec, build_capacity_plan,
+                                   next_pow2, pad_data, pad_plan,
+                                   refresh_plan, spec_fits)
+from repro.core.relation import Database, full_reduce
+
+from helpers import TOPOLOGIES, random_acyclic_db
+
+
+def _chain2_db(s1_keys, s2_keys, *, seed=0):
+    """A controlled chain2 database (S1 root — S2) with fixed column widths,
+    so two instances differ only in row/key counts (near-miss shapes)."""
+    rng = np.random.default_rng(seed)
+    tables = {
+        "S1": ({"e0": np.asarray(s1_keys)},
+               rng.normal(size=(len(s1_keys), 2)), ["a", "b"]),
+        "S2": ({"e0": np.asarray(s2_keys)},
+               rng.normal(size=(len(s2_keys), 1)), ["c"]),
+    }
+    edges = [("S1", "S2")]
+    db = full_reduce(Database.from_arrays(tables), edges)
+    return JoinTree.from_edges(db, "S1", edges)
+
+
+def _append_one_row(tree, name):
+    """(keys, data) for one appended row re-using an existing key of `name`
+    (keeps the database fully reduced)."""
+    rel = tree.db[name]
+    keys = {a: rel.key_col(a)[:1].copy() for a in rel.key_attrs}
+    return keys, np.full((1, rel.num_data_cols), 0.5)
+
+
+# -- bucketing ----------------------------------------------------------------
+
+
+def test_next_pow2():
+    assert [next_pow2(x) for x in (0, 1, 2, 3, 4, 5, 8, 9, 1023)] == \
+        [1, 1, 2, 4, 4, 8, 8, 16, 1024]
+
+
+@pytest.mark.parametrize("topology", list(TOPOLOGIES))
+def test_bucket_spec_layout(rng, topology):
+    _, _, plan = random_acyclic_db(topology, rng)
+    cap = bucket_spec(plan.spec)
+    assert spec_fits(plan.spec, cap)
+    row_acc = 0
+    for i in reversed(cap.preorder):
+        sp = cap.nodes[i]
+        assert sp.m == next_pow2(plan.spec.nodes[i].m)
+        assert sp.K == next_pow2(plan.spec.nodes[i].K)
+        assert sp.P == next_pow2(plan.spec.nodes[i].P)
+        assert (sp.tail_row0, sp.out_row0) == (row_acc, row_acc + sp.m)
+        row_acc += sp.m + sp.K
+    assert cap.r0_rows == row_acc
+    # column layout is part of the signature, not bucketed
+    assert cap.num_cols == plan.spec.num_cols
+    # idempotent: a bucketed spec is its own bucket
+    assert bucket_spec(cap) == cap
+
+
+# -- masked pipeline == exact pipeline ---------------------------------------
+
+
+@pytest.mark.parametrize("topology", list(TOPOLOGIES))
+@pytest.mark.parametrize("cartesian", [False, True])
+def test_padded_plan_matches_exact(rng, topology, cartesian):
+    """R₀ off the capacity plan has the Gram of the exact join and only zero
+    rows beyond the live layout; counts agree with the exact reference on
+    live slots and vanish on dead slots."""
+    _, tree, plan = random_acyclic_db(topology, rng, cartesian=cartesian)
+    cap = pad_plan(plan)
+    a = np.asarray(materialize_join(tree))
+    r0 = np.asarray(figaro_r0(cap, dtype=jnp.float64))
+    assert r0.shape == (cap.spec.r0_rows, cap.spec.num_cols)
+    g = a.T @ a
+    err = np.abs(g - r0.T @ r0).max() / max(np.abs(g).max(), 1e-30)
+    assert err < 1e-11, err
+
+    ref = compute_counts_reference(plan)
+    cnt = compute_counts(cap, dtype=jnp.float64)
+    for i, sp in enumerate(plan.spec.nodes):
+        for key, width in (("rpk", sp.K), ("full", sp.K), ("phi_circ", sp.K)):
+            got = np.asarray(cnt[i][key])
+            np.testing.assert_allclose(got[:width], ref[i][key], rtol=1e-12,
+                                       err_msg=f"{sp.name}:{key}")
+            assert (got[width:] == 0).all(), f"{sp.name}:{key} dead slots"
+
+
+def test_pad_plan_rejects_masked_input(rng):
+    _, _, plan = random_acyclic_db("chain2", rng)
+    cap = pad_plan(plan)
+    with pytest.raises(ValueError, match="exact plan"):
+        pad_plan(cap)
+
+
+def test_pad_data_batched(rng):
+    _, _, plan = random_acyclic_db("chain3", rng)
+    cap = bucket_spec(plan.spec)
+    batch = tuple(np.stack([np.asarray(d)] * 3) for d in plan.data)
+    padded = pad_data(batch, cap)
+    for d, p, sp in zip(batch, padded, cap.nodes):
+        assert p.shape == (3, sp.m, sp.n)
+        np.testing.assert_array_equal(p[:, : d.shape[1]], d)
+        assert (p[:, d.shape[1]:] == 0).all()
+
+
+# -- acceptance: zero retraces on signature-preserving appends ----------------
+
+
+def test_refresh_zero_retrace_and_matches_fresh_plan(rng):
+    _, tree, _ = random_acyclic_db("star3", rng)
+    # headroom=1: the append below must fit even if a node's live row count
+    # already sits exactly on a power of two
+    cap = build_capacity_plan(tree, headroom=1)
+    engine = FigaroEngine(donate_data=False)
+
+    engine.qr(cap, dtype=jnp.float64)
+    assert engine.trace_count("qr") == 1
+
+    # Append a row to a non-root relation, staying inside the buckets.
+    name = tree.preorder()[1]
+    refreshed = refresh_plan(cap, {name: _append_one_row(tree, name)})
+    assert refreshed.spec == cap.spec, "append within capacity changed spec"
+
+    r_cap = np.asarray(engine.qr(refreshed, dtype=jnp.float64))
+    assert engine.trace_count("qr") == 1, "signature-preserving append retraced"
+
+    # ... and the masked result equals a fresh exact plan over the new data.
+    fresh = build_plan(refreshed.source_tree)
+    r_ref = np.asarray(engine.qr(fresh, dtype=jnp.float64))
+    np.testing.assert_allclose(r_cap, r_ref,
+                               atol=1e-10 * max(np.abs(r_ref).max(), 1.0))
+
+    s_cap, vt_cap = engine.svd(refreshed, dtype=jnp.float64)
+    s_ref, _ = engine.svd(fresh, dtype=jnp.float64)
+    np.testing.assert_allclose(np.asarray(s_cap), np.asarray(s_ref),
+                               atol=1e-10 * max(np.asarray(s_ref).max(), 1.0))
+    assert np.asarray(vt_cap).shape == (cap.spec.num_cols, cap.spec.num_cols)
+
+    pca_cap = engine.pca(refreshed, k=2, dtype=jnp.float64)
+    pca_ref = engine.pca(fresh, k=2, dtype=jnp.float64)
+    np.testing.assert_allclose(np.asarray(pca_cap.explained_variance),
+                               np.asarray(pca_ref.explained_variance),
+                               atol=1e-10)
+    np.testing.assert_allclose(np.asarray(pca_cap.mean),
+                               np.asarray(pca_ref.mean), atol=1e-10)
+    np.testing.assert_allclose(float(pca_cap.num_rows),
+                               float(pca_ref.num_rows), rtol=0)
+
+
+def test_refresh_repeated_appends_stay_cached(rng):
+    """A stream of appends re-dispatches one executable until a bucket
+    overflows — then exactly one retrace at the grown signature."""
+    tree = _chain2_db([0, 0, 1], [0, 1])
+    cap = build_capacity_plan(tree)  # S1: m_cap 4
+    engine = FigaroEngine(donate_data=False)
+    engine.r0(cap, dtype=jnp.float64)
+    plan = cap
+    while plan.spec.nodes[0].m > plan.source_tree.db["S1"].num_rows:
+        plan = refresh_plan(plan, {"S1": _append_one_row(plan.source_tree,
+                                                         "S1")})
+        engine.r0(plan, dtype=jnp.float64)
+        assert engine.trace_count("r0") == 1
+    # capacity exhausted: next append grows m_cap 4 -> 8, one retrace
+    plan = refresh_plan(plan, {"S1": _append_one_row(plan.source_tree, "S1")})
+    assert plan.spec != cap.spec
+    assert plan.spec.nodes[0].m == 8
+    engine.r0(plan, dtype=jnp.float64)
+    assert engine.trace_count("r0") == 2
+    # correctness after the growth
+    a = np.asarray(materialize_join(plan.source_tree))
+    r0 = np.asarray(figaro_r0(plan, dtype=jnp.float64))
+    g = a.T @ a
+    assert np.abs(g - r0.T @ r0).max() / np.abs(g).max() < 1e-11
+
+
+# -- acceptance: near-miss shapes share one executable ------------------------
+
+
+def test_bucket_sharing_across_near_miss_plans():
+    """Two plans differing only within one bucket (3 vs 4 fact rows) land on
+    one cached executable, via engine bucket=True and via capacity plans."""
+    tree_a = _chain2_db([0, 0, 1], [0, 1, 1], seed=1)
+    tree_b = _chain2_db([0, 1, 1, 1], [0, 0, 1], seed=2)
+    plan_a, plan_b = build_plan(tree_a), build_plan(tree_b)
+    assert plan_a.spec != plan_b.spec  # genuinely different exact signatures
+    assert bucket_spec(plan_a.spec) == bucket_spec(plan_b.spec)
+
+    engine = FigaroEngine(donate_data=False)
+    r_a = engine.qr(plan_a, bucket=True, dtype=jnp.float64)
+    r_b = engine.qr(plan_b, bucket=True, dtype=jnp.float64)
+    assert engine.trace_count("qr") == 1, "bucketed near-miss plans retraced"
+
+    for tree, r in ((tree_a, r_a), (tree_b, r_b)):
+        a = np.asarray(materialize_join(tree))
+        g = a.T @ a
+        r = np.asarray(r)
+        assert np.abs(g - r.T @ r).max() / np.abs(g).max() < 1e-11
+
+    # capacity plans built into the same buckets share the executable too
+    cap_a = build_capacity_plan(tree_a)
+    cap_b = build_capacity_plan(tree_b)
+    assert cap_a.spec == cap_b.spec
+    engine.qr(cap_a, dtype=jnp.float64)
+    engine.qr(cap_b, dtype=jnp.float64)
+    assert engine.trace_count("qr") == 1
+
+
+def test_bucketed_batched_dispatch_matches_exact(rng):
+    """bucket=True on a batched dispatch pads the request rows too."""
+    _, _, plan = random_acyclic_db("chain3", rng)
+    engine = FigaroEngine(donate_data=False)
+    batch = tuple(
+        np.stack([np.asarray(d) * (1.0 + 0.1 * i) for i in range(3)])
+        for d in plan.data)
+    rb = np.asarray(engine.qr(plan, batch, batched=True, bucket=True,
+                              dtype=jnp.float64))
+    for i in range(3):
+        ri = np.asarray(engine.qr(plan, [d[i] for d in batch],
+                                  dtype=jnp.float64))
+        np.testing.assert_allclose(rb[i], ri,
+                                   atol=1e-10 * max(np.abs(ri).max(), 1.0))
+
+
+# -- refresh plumbing ---------------------------------------------------------
+
+
+def test_refresh_requires_capacity_plan(rng):
+    _, _, plan = random_acyclic_db("chain2", rng)
+    with pytest.raises(ValueError, match="build_capacity_plan"):
+        refresh_plan(plan, {})
+
+
+def test_refresh_rejects_dangling_append():
+    tree = _chain2_db([0, 0, 1], [0, 1])
+    cap = build_capacity_plan(tree)
+    # key 7 exists in no S1 row -> database no longer fully reduced
+    with pytest.raises(ValueError, match="reduce"):
+        refresh_plan(cap, {"S2": ({"e0": np.array([7])},
+                                  np.zeros((1, 1)))})
+
+
+def test_server_append_online(rng):
+    from repro.train.serve import make_figaro_server
+
+    _, tree, _ = random_acyclic_db("star3", rng)
+    cap = build_capacity_plan(tree, headroom=1)
+    engine = FigaroEngine(donate_data=False)
+    server = make_figaro_server(cap, kind="qr", dtype=jnp.float64,
+                                engine=engine)
+
+    def live_batch(plan_tree, b=2):
+        exact = build_plan(plan_tree)
+        return tuple(np.stack([np.asarray(d) * (1.0 + 0.1 * i)
+                               for i in range(b)]) for d in exact.data)
+
+    rb = np.asarray(server(live_batch(tree)))
+    assert rb.shape == (2, cap.spec.num_cols, cap.spec.num_cols)
+    assert engine.trace_count("qr_batched") == 1
+
+    name = tree.preorder()[1]
+    assert server.append(name, _append_one_row(tree, name))  # same signature
+    new_tree = server.plan.source_tree
+    rb2 = np.asarray(server(live_batch(new_tree)))
+    assert engine.trace_count("qr_batched") == 1, "append retraced the server"
+
+    # the served result reflects the appended data: compare sample 0 against
+    # a fresh exact plan over the grown database
+    fresh = build_plan(new_tree)
+    r_ref = np.asarray(engine.qr(fresh, dtype=jnp.float64))
+    np.testing.assert_allclose(rb2[0], r_ref,
+                               atol=1e-10 * max(np.abs(r_ref).max(), 1.0))
+
+    # stale-sized request buffers (pre-append live sizes) must raise, not be
+    # silently zero-filled into a wrong answer
+    stale = live_batch(tree)
+    if any(a.shape != b.shape for a, b in zip(stale, live_batch(new_tree))):
+        with pytest.raises(ValueError, match="live size"):
+            server(stale)
+
+    # capacity plans that grew past their buckets keep the caller's headroom
+    cap2 = build_capacity_plan(tree, headroom=3)
+    assert cap2.capacity_headroom == 3
+    refreshed = refresh_plan(cap2, {name: _append_one_row(tree, name)})
+    assert getattr(refreshed, "capacity_headroom", None) == 3
