@@ -158,6 +158,39 @@ def run(csv: Csv, *, fast: bool = False) -> None:
         add(name, "traces_qr", engine.trace_count("qr"))
         add(name, "traces_qr_batched", engine.trace_count("qr_batched"))
 
+        # -- façade overhead: Session/JoinDataset dispatch vs direct engine -
+        # The repro.figaro Session is the supported surface; it must stay a
+        # thin veneer. Same engine, same executable — the delta is pure
+        # Python option-resolution, asserted under 5% at bench sizes.
+        from repro.api import Session
+
+        def best_of(fn, n=15):
+            # Min over many reps: the overhead delta (~µs) sits well under
+            # scheduler noise at ms dispatch scale, and min is the standard
+            # noise filter for pure-overhead comparisons.
+            block(fn())  # warm
+            ts = []
+            for _ in range(n):
+                t0 = time.perf_counter()
+                block(fn())
+                ts.append(time.perf_counter() - t0)
+            return min(ts)
+
+        sess = Session(engine=engine, bucket=False)
+        t_direct = best_of(lambda: engine.qr(plan, dtype=jnp.float64))
+        t_session = best_of(lambda: sess.qr(plan, dtype=jnp.float64))
+        ds = sess.from_tree(tree)
+        t_dataset = best_of(lambda: ds.qr(dtype=jnp.float64))
+        case = f"{name}:api_overhead"
+        add(case, "direct_engine_s", t_direct)
+        add(case, "session_s", t_session)
+        add(case, "dataset_s", t_dataset)
+        add(case, "session_overhead_frac", t_session / t_direct - 1.0)
+        add(case, "dataset_overhead_frac", t_dataset / t_direct - 1.0)
+        assert t_session < 1.05 * t_direct, (
+            f"{name}: Session dispatch {t_session:.6f}s exceeds direct "
+            f"engine {t_direct:.6f}s by more than 5%")
+
         # -- single-device vs mesh-sharded batched dispatch -----------------
         from repro.launch.mesh import make_data_mesh
 

@@ -2,11 +2,14 @@
 
 A feature store defined as a snowflake join feeds three classical-ML tasks,
 all computed *without materializing the join* by reading everything off
-FiGaRo's R factor:
+FiGaRo's R factor, through the one `repro.figaro` façade:
 
-  * linear regression (closed form via back-substitution on R),
-  * PCA (eigen-decomposition of the N x N Gram from R, factorized centering),
-  * SVD (singular values/right vectors of the join matrix).
+  * linear regression  — ``ds.lsq(label)`` (closed form via
+    back-substitution on R),
+  * PCA                — ``ds.pca(k=)`` (eigen-decomposition of the N x N
+    Gram from R, factorized centering),
+  * SVD                — ``ds.svd()`` (singular values/right vectors of the
+    join matrix).
 
 Run:  PYTHONPATH=src python examples/join_ml.py
 """
@@ -16,38 +19,38 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np
 
-from repro.core.join_tree import build_plan
+from repro import figaro
 from repro.core.materialize import materialize_join
-from repro.core.svd import (least_squares_over_join, pca_over_join,
-                            svd_over_join)
 from repro.data.relational import retailer_like
 
 # Retailer-style snowflake: Inventory fact + Location->Census, Item, Weather.
-tree = retailer_like(scale=800, cols=4)
-plan = build_plan(tree)
-n = plan.num_cols
+sess = figaro.Session()  # one engine/dtype/bucketing policy for all 3 tasks
+ds = sess.from_tree(retailer_like(scale=800, cols=4))
+n = len(ds.columns)
 
 # --- linear regression: predict the last column from the rest ---------------
-beta, resid = least_squares_over_join(plan, label_col=n - 1)
-a = materialize_join(tree)  # ONLY to verify; FiGaRo never builds this
+beta, resid = ds.lsq(n - 1)  # label by index; names work too ("Weather.w3")
+a = materialize_join(ds.tree)  # ONLY to verify; FiGaRo never builds this
 beta_ref, *_ = np.linalg.lstsq(a[:, :-1], a[:, -1], rcond=None)
 print(f"join matrix         : {a.shape[0]} x {a.shape[1]} "
-      f"(input rows: {sum(nd.data.shape[0] for nd in plan.nodes)})")
+      f"(input rows: {ds.tree.db.total_rows})")
 print(f"regression beta err : {np.abs(np.asarray(beta) - beta_ref).max():.2e}")
 print(f"residual norm       : {float(resid):.4f}")
 
 # --- PCA ---------------------------------------------------------------------
-pca = pca_over_join(plan, k=3)
+pca = ds.pca(k=3)
 ac = a - a.mean(axis=0)
 ev_ref = np.sort(np.linalg.eigvalsh(ac.T @ ac / (a.shape[0] - 1)))[::-1][:3]
 print(f"PCA top-3 variance  : {np.asarray(pca.explained_variance).round(3)}")
 print(f"       (reference)  : {ev_ref.round(3)}")
 
 # --- SVD ----------------------------------------------------------------------
-s, vt = svd_over_join(plan)
+s, vt = ds.svd()
 s_ref = np.linalg.svd(a, compute_uv=False)
 print(f"singular values err : {np.abs(np.asarray(s) - s_ref[:len(s)]).max():.2e}")
 
 assert np.abs(np.asarray(beta) - beta_ref).max() < 1e-6
 assert np.allclose(np.asarray(pca.explained_variance), ev_ref, rtol=1e-7)
+# All three reads hit ONE engine; the QR inside compiled once per signature.
+assert ds.stats()["trace_count"] == 3  # qr is re-derived per kind's pipeline
 print("OK — regression/PCA/SVD over the join, join never materialized.")

@@ -1,15 +1,19 @@
-"""Quickstart: QR decomposition over a database join, without the join.
+"""Quickstart: QR/PCA over a database join, without the join.
 
-Builds a small star-schema database (fact table + 2 dimension tables),
-computes the upper-triangular R of the join matrix two ways:
+The whole FiGaRo path goes through ONE surface — `repro.figaro`
+(`Session` / `JoinDataset`):
 
-  1. FiGaRo (this library): counts -> heads/tails -> R0 -> TSQR post-process,
-     touching only the INPUT relations;
-  2. the classical baseline: materialize the join, Householder QR;
-
-shows they agree while FiGaRo reads ~10x fewer values, then serves a batch of
-feature-set variants through the compiled `FigaroEngine` — one executable per
-plan signature, one vmapped dispatch for the whole batch.
+  1. ingest a small star-schema database and fix the join tree;
+  2. `ds.qr()` — the paper's pipeline (counts -> heads/tails -> R0 -> TSQR),
+     touching only the INPUT relations; verified against the classical
+     baseline (materialize the join, Householder QR) while reading ~10x
+     fewer values;
+  3. `ds.pca(k=)` / `ds.lsq(label)` — downstream ML reads off the same R;
+  4. batched serving: a leading batch axis answers B feature-sets in one
+     compiled dispatch (sharded over a device mesh when the Session has one);
+  5. `ds.append(...)` — online data refresh with ZERO retraces (capacity is
+     the compile signature, live size is data);
+  6. `ds.serve(kind=...)` — the standing batched serving endpoint.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -20,14 +24,13 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.join_tree import JoinTree, build_plan
+from repro import figaro
 from repro.core.materialize import join_output_rows, materialize_join
-from repro.core.qr import figaro_qr, materialized_qr
-from repro.core.relation import Database, full_reduce
+from repro.core.qr import materialized_qr
 
 rng = np.random.default_rng(0)
 
-# --- 1. a database: Orders + Customers + Products + Reviews (many-to-many) --
+# --- 1. ingest + join: Orders + Customers + Products + Reviews --------------
 n_cust, n_prod, n_orders = 50, 30, 2000
 tables = {
     "Orders": ({"cust": rng.integers(0, n_cust, n_orders),
@@ -41,95 +44,86 @@ tables = {
     "Reviews": ({"prod": rng.integers(0, n_prod, n_prod * 6)},
                 rng.normal(size=(n_prod * 6, 1)), ["stars"]),
 }
-db = Database.from_arrays(tables)
 edges = [("Orders", "Customers"), ("Orders", "Products"),
          ("Products", "Reviews")]
-db = full_reduce(db, edges)                      # drop dangling tuples
-tree = JoinTree.from_edges(db, "Orders", edges)  # fact table at the root
-plan = build_plan(tree)                          # static index structure
 
-# --- 2. FiGaRo: R without materializing the join ----------------------------
-r_figaro = figaro_qr(plan, dtype=jnp.float64)
+# One Session = one engine + dtype/mesh/bucketing policy. headroom reserves
+# row capacity per relation so streaming appends stay inside the compiled
+# signature (see step 5).
+sess = figaro.Session(dtype=jnp.float64, headroom=16)
+ds = sess.ingest(tables).join("Orders", edges)  # fact table at the root
 
-# --- 3. classical baseline: materialize, then QR ----------------------------
-a = materialize_join(tree)
-r_baseline = materialized_qr(tree)
+# --- 2. FiGaRo QR vs the classical baseline ---------------------------------
+r_figaro = ds.qr()  # first compute: builds the capacity plan, compiles once
 
+a = materialize_join(ds.tree)          # ONLY for the baseline/verification
+r_baseline = materialized_qr(ds.tree)
 err = np.abs(np.asarray(r_figaro) - np.asarray(r_baseline)).max() \
     / np.abs(np.asarray(r_baseline)).max()
 
-rows_in = db.total_rows
-rows_join = join_output_rows(tree)
+rows_in = ds.tree.db.total_rows
+rows_join = join_output_rows(ds.tree)
 print(f"input rows          : {rows_in}")
 print(f"join rows           : {rows_join}  ({rows_join / rows_in:.1f}x blowup)")
-print(f"R shape             : {r_figaro.shape}")
+print(f"R shape             : {r_figaro.shape}   columns: {ds.columns[:3]}...")
 print(f"max rel. difference : {err:.2e}")
 assert err < 1e-10
 print("OK — FiGaRo matches the materialized-join QR without building the join.")
 
-# --- 4. the compiled engine: one plan, many feature-sets per dispatch -------
-# The plan is a pytree (static spec = treedef, index arrays = leaves), so it
-# crosses jax.jit as an ARGUMENT: the engine compiles once per plan signature
-# and every same-shaped database / refreshed batch is launch-only.
-from repro.core.engine import FigaroEngine  # noqa: E402
+# --- 3. downstream ML off the same R: PCA + ridge regression ----------------
+pca = ds.pca(k=3)
+beta, resid = ds.lsq("price", ridge=0.1)  # label column by name
+ac = a - a.mean(axis=0)
+ev_ref = np.sort(np.linalg.eigvalsh(ac.T @ ac / (a.shape[0] - 1)))[::-1][:3]
+assert np.allclose(np.asarray(pca.explained_variance), ev_ref, rtol=1e-8)
+print(f"PCA top-3 variance  : {np.asarray(pca.explained_variance).round(3)}")
+print(f"ridge lsq           : beta {beta.shape}, residual {float(resid):.3f}")
+print("OK — regression/PCA read off R; the join is never materialized.")
 
-engine = FigaroEngine(donate_data=False)
+# --- 4. batched serving: one dispatch, many feature-sets --------------------
+# A leading batch axis on the data switches to the batched (vmapped)
+# executable; with figaro.Session(mesh=make_data_mesh()) the same call
+# shards the batch over every device (one executable per plan+mesh
+# signature). Requests sized to the LIVE row counts are padded to capacity
+# inside the dataset.
 B = 8  # e.g. 8 users' feature-set variants over the same join structure
 batch = tuple(np.stack([np.asarray(d) * (1.0 + 0.01 * i) for i in range(B)])
-              for d in plan.data)
-r_batch = engine.qr(plan, batch, batched=True, dtype=jnp.float64)
-assert r_batch.shape == (B, plan.num_cols, plan.num_cols)
-r0_check = np.asarray(engine.qr(plan, [d[0] for d in batch],
-                                dtype=jnp.float64))
+              for d in ds.plan.data)
+r_batch = ds.qr(batch)
+assert r_batch.shape == (B, ds.plan.num_cols, ds.plan.num_cols)
+r0_check = np.asarray(ds.qr([d[0] for d in batch]))
 assert np.abs(np.asarray(r_batch[0]) - r0_check).max() < 1e-10
-engine.qr(plan, batch, batched=True, dtype=jnp.float64)  # cache hit
-assert engine.trace_count("qr_batched") == 1
+ds.qr(batch)  # cache hit: same signature, launch-only
+st = ds.stats()
+assert st["traces"]["qr_batched"] == 1
 print(f"engine              : served {B} feature-sets in one dispatch, "
-      f"{engine.trace_count()} compilations total")
-print("OK — compiled engine: batched serving off one cached executable.")
+      f"{st['trace_count']} compilations total")
+print("OK — batched serving off one cached executable.")
 
-# --- 5. sharded serving: split the request batch over the data mesh ---------
-# `shard=mesh` (or shard=(mesh, axis)) splits the leading batch axis over the
-# mesh's `data` axis with shard_map: ONE cached executable per (plan
-# signature, mesh signature) answers the global batch across all devices. The
-# batch is padded/bucketed to the mesh size inside the engine, so any B works.
-# The same entry points back `train.serve.make_figaro_server(..., mesh=mesh)`
-# (kinds: qr / svd / pca / lsq) and `distributed.partitioned_figaro_qr(...,
-# mesh=mesh)` places one fact partition per device slot.
-from repro.launch.mesh import make_data_mesh  # noqa: E402
+# --- 5. online append: capacity is the signature, live size is data ---------
+# The capacity plan buckets every node's (rows, keys, parent-keys) up to
+# powers of two (+ headroom) and carries a live-row mask as a pytree LEAF:
+# appending rows only rewrites leaf values, so a refresh inside the buckets
+# re-dispatches the cached executable with ZERO retraces. The compile count
+# tracks tenant *shapes* (buckets), not databases or refreshes.
+compiles = st["traces"]["qr"]
+in_capacity = ds.append("Reviews", {"prod": rng.integers(0, n_prod, 5)},
+                        rng.normal(size=(5, 1)))  # 5 fresh reviews
+assert in_capacity, "append within headroom must keep the plan signature"
+r_new = ds.qr()
+st = ds.stats()
+assert st["traces"]["qr"] == compiles, "append must not retrace"
+r_check = materialized_qr(ds.tree)
+assert np.abs(np.asarray(r_new) - np.asarray(r_check)).max() \
+    / np.abs(np.asarray(r_check)).max() < 1e-10
+live = st["nodes"]["Reviews"]
+print(f"refresh             : +5 rows, {st['traces']['qr'] - compiles} new "
+      f"compilations; Reviews live/capacity = "
+      f"{live['live_rows']}/{live['capacity_rows']}")
+print("OK — incremental refresh: appends are launch-only.")
 
-mesh = make_data_mesh()  # all local devices on a 1-D "data" axis
-r_mesh = engine.qr(plan, batch, batched=True, shard=mesh, dtype=jnp.float64)
-assert np.abs(np.asarray(r_mesh) - np.asarray(r_batch)).max() < 1e-10
-print(f"sharded             : same {B}-request batch over "
-      f"{mesh.shape['data']} device(s); run under "
-      "XLA_FLAGS=--xla_force_host_platform_device_count=4 to spread it")
-print("OK — sharded serving: one executable, the whole mesh answers.")
-
-# --- 6. incremental refresh + bucketed signatures ----------------------------
-# The contract: CAPACITY is static, LIVE SIZE is dynamic. A capacity plan
-# buckets every node's (rows, keys, parent-keys) up to powers of two and
-# carries a live-row mask as a pytree leaf; appending rows only rewrites leaf
-# values, so a refresh whose live sizes stay inside the buckets re-dispatches
-# the cached executable with ZERO retraces — the compile count tracks tenant
-# *shapes* (buckets), not databases or refreshes.
-from repro.core.plan_cache import build_capacity_plan, refresh_plan  # noqa: E402
-
-cap = build_capacity_plan(tree, headroom=16)  # room for streaming appends
-r_cap = engine.qr(cap, dtype=jnp.float64)
-assert np.abs(np.asarray(r_cap) - np.asarray(r_figaro)).max() < 1e-10
-compiles = engine.trace_count("qr")
-
-new_stars = ({"prod": rng.integers(0, n_prod, 5)},  # 5 fresh reviews
-             rng.normal(size=(5, 1)))
-old_spec = cap.spec
-cap = refresh_plan(cap, {"Reviews": new_stars})
-assert cap.spec == old_spec, "append within capacity must keep the signature"
-r_new = engine.qr(cap, dtype=jnp.float64)
-assert engine.trace_count("qr") == compiles, "append must not retrace"
-r_check = figaro_qr(build_plan(cap.source_tree), dtype=jnp.float64)
-assert np.abs(np.asarray(r_new) - np.asarray(r_check)).max() < 1e-10
-print(f"refresh             : appended 5 rows, served with "
-      f"{engine.trace_count('qr') - compiles} new compilations")
-print("OK — incremental refresh: appends are launch-only, capacity is the "
-      "signature.")
+# --- 6. a standing serving endpoint -----------------------------------------
+server = ds.serve(kind="qr")  # also: svd / pca / lsq(label_col=...)
+r_served = server(tuple(np.stack([np.asarray(d)] * 2) for d in ds.plan.data))
+assert np.asarray(r_served).shape == (2, ds.plan.num_cols, ds.plan.num_cols)
+print("OK — ds.serve(): batched FigaroServer with online server.append().")

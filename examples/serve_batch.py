@@ -8,8 +8,9 @@ decode_32k / long_500k shapes.
 
 ``--figaro`` mode: the linear-algebra-over-joins serving path — one join
 structure, a global request batch sharded over the local ``data`` mesh
-through `make_figaro_server` / `FigaroEngine(shard=...)`. One cached
-executable per (plan signature, mesh signature) answers the whole batch.
+through the `repro.figaro` façade (`Session(mesh=...)` ... ``ds.serve()``).
+One cached executable per (plan signature, mesh signature) answers the
+whole batch.
 
 Run:  PYTHONPATH=src python examples/serve_batch.py [--arch rwkv6-1.6b]
       PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
@@ -63,11 +64,8 @@ def lm_demo(args) -> None:
 
 def figaro_demo(args) -> None:
     jax.config.update("jax_enable_x64", True)
-    from repro.core.engine import FigaroEngine
-    from repro.core.join_tree import JoinTree, build_plan
-    from repro.core.relation import Database, full_reduce
+    from repro import figaro
     from repro.launch.mesh import make_data_mesh
-    from repro.train.serve import make_figaro_server
 
     rng = np.random.default_rng(0)
     tables = {
@@ -79,24 +77,20 @@ def figaro_demo(args) -> None:
         "Products": ({"prod": np.arange(30)}, rng.normal(size=(30, 2)),
                      ["price", "weight"]),
     }
-    db = Database.from_arrays(tables)
     edges = [("Orders", "Customers"), ("Orders", "Products")]
-    db = full_reduce(db, edges)
-    tree = JoinTree.from_edges(db, "Orders", edges)
-    plan = build_plan(tree)
 
+    # One Session owns the mesh + dtype policy; every batched dispatch it
+    # makes shards the request axis over mesh["data"] via shard_map.
     mesh = make_data_mesh()  # every local device on a 1-D `data` axis
-    engine = FigaroEngine(donate_data=False)
-    serve_qr = make_figaro_server(plan, kind="qr", dtype=jnp.float64,
-                                  engine=engine, mesh=mesh)
-    serve_lsq = make_figaro_server(plan, kind="lsq", label_col=0,
-                                   dtype=jnp.float64, engine=engine,
-                                   mesh=mesh)
+    sess = figaro.Session(mesh=mesh, dtype=jnp.float64)
+    ds = sess.ingest(tables).join("Orders", edges)
+    serve_qr = ds.serve(kind="qr")
+    serve_lsq = ds.serve(kind="lsq", label_col="amount")
 
     def request_batch():
         return tuple(
             np.stack([np.asarray(d) * (1.0 + 0.02 * i)
-                      for i in range(args.batch)]) for d in plan.data)
+                      for i in range(args.batch)]) for d in ds.plan.data)
 
     serve_qr(request_batch())  # compile + answer
     data = request_batch()  # host-side batch build stays out of the timing
@@ -105,15 +99,17 @@ def figaro_demo(args) -> None:
     np.asarray(r)
     dt = time.time() - t0
     betas, resids = serve_lsq(request_batch())
-    assert r.shape == (args.batch, plan.num_cols, plan.num_cols)
-    assert betas.shape == (args.batch, plan.num_cols - 1)
+    n = ds.plan.num_cols
+    assert r.shape == (args.batch, n, n)
+    assert betas.shape == (args.batch, n - 1)
+    stats = ds.stats()
     print(f"mesh           : {mesh.shape['data']} device(s) on axis 'data'")
     print(f"batch          : {args.batch} requests/dispatch "
           f"(padded to a multiple of the mesh inside the engine)")
     print(f"qr dispatch    : {dt * 1e3:.1f} ms launch-only "
           f"({dt * 1e3 / args.batch:.2f} ms/request)")
-    print(f"compilations   : qr={engine.trace_count('qr_batched')}, "
-          f"lsq={engine.trace_count('least_squares_batched')} "
+    print(f"compilations   : qr={stats['traces']['qr_batched']}, "
+          f"lsq={stats['traces']['least_squares_batched']} "
           "(one per plan+mesh signature)")
     print("OK — sharded batched FiGaRo serving off one cached executable.")
 

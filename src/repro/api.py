@@ -1,0 +1,563 @@
+"""One façade for the join-factorization stack: `Session` / `JoinDataset`.
+
+FiGaRo is one capability — QR/SVD/PCA/least-squares over a join without
+materializing it — and this module is its one user-facing surface (exported
+as ``repro.figaro``). A `Session` owns the compute configuration (engine,
+dtype policy, mesh/sharding, bucketing defaults); a `JoinDataset` owns one
+join's **plan lifecycle** (lazy capacity-plan build, online appends, stats)
+and exposes the fluent compute methods::
+
+    from repro import figaro
+
+    sess = figaro.Session(mesh=mesh, headroom=64)     # compute config, once
+    ds = sess.ingest(tables).join("Orders", edges)    # -> JoinDataset
+    r = ds.qr()                                       # compiles lazily
+    pca = ds.pca(k=3)
+    beta, resid = ds.lsq("price", ridge=0.1)          # label by column name
+    ds.append("Reviews", {"prod": keys}, rows)        # zero-retrace append
+    ds.qr()                                           # launch-only
+    server = ds.serve(kind="qr")                      # batched FigaroServer
+
+Everything underneath — `FigaroEngine` executable caching, plan-as-pytree
+jit, `plan_cache` bucketing/refreshes, `shard_map` serving — is the machinery
+of PRs 1-3; this module only decides *when* each piece runs.
+
+Migration table (old call -> new call)
+--------------------------------------
+
+===================================================  ==========================================
+legacy entry point                                   Session / JoinDataset
+===================================================  ==========================================
+``Database.from_arrays(t)`` + ``full_reduce``        ``sess.ingest(t).join(root, edges)``
+  + ``JoinTree.from_edges`` + ``build_plan``
+``figaro_qr(plan, dtype=...)``                       ``ds.qr(dtype=...)``
+``figaro_qr_batched(plan, batch)``                   ``ds.qr(batch)`` (leading batch axis)
+``svd_over_join(plan)``                              ``ds.svd()``
+``pca_over_join(plan, k)``                           ``ds.pca(k=k)``
+``least_squares_over_join(plan, label_col=j)``       ``ds.lsq(j)`` / ``ds.lsq("col_name")``
+``build_capacity_plan(tree, headroom=h)``            ``Session(headroom=h).from_tree(tree)``
+``refresh_plan(plan, {n: (keys, rows)})``            ``ds.append(n, keys, rows)``
+``engine.qr(plan, b, batched=True, shard=mesh)``     ``Session(mesh=mesh)`` ... ``ds.qr(b)``
+``make_figaro_server(plan, kind=..., mesh=...)``     ``ds.serve(kind=...)``
+``default_engine()``                                 ``default_session().engine``
+===================================================  ==========================================
+
+The legacy entry points still work — they are thin delegations onto the
+module-level `default_session()` — but new code should start here: future
+capabilities (async serving, delta-aware counts, randomized sketching
+front-ends, TPU kernels) land as Session options and JoinDataset methods.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import FigaroEngine, default_engine, plan_for
+from repro.core.join_tree import FigaroPlan, JoinTree, build_plan
+from repro.core.plan_cache import (_append_rows, build_capacity_plan,
+                                   pad_data, pad_plan, refresh_plan)
+from repro.core.relation import Database, full_reduce
+
+__all__ = ["Session", "TableSet", "JoinDataset", "default_session"]
+
+_UNSET = object()
+
+# Per-kind dtype defaults when the session does not pin one — identical to
+# the legacy module-level entry points (QR serves in float32 by default; the
+# spectral/regression reads default to float64 like the paper's evaluation).
+_KIND_DTYPES = {
+    "r0": jnp.float32,
+    "qr": jnp.float32,
+    "svd": jnp.float64,
+    "pca": jnp.float64,
+    "least_squares": jnp.float64,
+}
+
+# serve() kind -> engine pipeline kind (for dtype policy resolution).
+_SERVE_KINDS = {"qr": "qr", "svd": "svd", "pca": "pca",
+                "lsq": "least_squares"}
+
+
+class Session:
+    """Owns the compute configuration of the join-factorization stack.
+
+    One `Session` = one engine (executable cache + trace/eviction counters),
+    one dtype policy, one mesh/sharding choice, and one bucketing default.
+    Datasets made from it (`ingest(...).join(...)` / `from_tree(...)`)
+    inherit that configuration; per-call keyword overrides always win.
+
+    Parameters
+    ----------
+    engine:      a `FigaroEngine` to share (default: a fresh engine built
+                 from ``donate_data`` / ``max_cached``). Sharing one engine
+                 across sessions shares its executable cache.
+    mesh:        a `jax.sharding.Mesh`; batched dispatches shard their
+                 request-batch axis over ``mesh[shard_axis]`` (one executable
+                 per (plan signature, mesh signature) answers the global
+                 batch). ``None`` = single-device dispatch.
+    dtype:       pin every pipeline to one dtype; ``None`` (default) keeps
+                 the per-kind legacy defaults (qr/r0: float32, svd/pca/lsq:
+                 float64).
+    bucket:      ``True`` (default): datasets build **bucketed** capacity
+                 plans (power-of-two node sizes) and ad-hoc plans are padded
+                 into their buckets at dispatch, so near-miss shapes share
+                 one executable. ``False``: capacities equal the exact live
+                 sizes — bit-identical to the pre-Session exact path, but
+                 every append regrows the plan (one retrace each).
+    headroom:    extra row capacity per node reserved at plan build, so a
+                 known append rate cannot immediately overflow a bucket.
+    method, leaf_rows, panel, use_kernel:
+                 post-processing defaults forwarded to every dispatch.
+    donate_data, max_cached:
+                 forwarded to the engine constructor; combining either with
+                 ``engine=`` raises (configure the engine directly instead).
+                 Sessions default to non-donating engines (safe for repeated
+                 dispatch of the same buffers); ``max_cached`` bounds the
+                 per-kind executable cache (LRU, evictions counted).
+
+    Capacity vs live size (the contract `JoinDataset` operates under)
+    -----------------------------------------------------------------
+    **Capacity** is static: each node's bucketed ``(rows, keys,
+    parent-keys)`` plus the R₀ row layout are part of the plan's treedef and
+    are baked into the compiled executable. **Live size** is dynamic: the
+    live-row mask and the zeroed dead ``group_count`` slots are pytree
+    *leaves*, so they change per dispatch without retracing. Dead rows carry
+    Givens weight 0 and emit exactly-zero R₀ rows — a capacity plan computes
+    exactly what the underlying exact plan computes.
+
+    Compile-count contract
+    ----------------------
+    One compilation per (pipeline kind, plan signature, mesh signature,
+    static options). ``ds.append(...)`` that stays within capacity keeps the
+    signature — the next dispatch is launch-only, **zero retraces**
+    (`ds.stats()` exposes the engine's per-kind trace counters so callers
+    can assert this instead of guessing). An append that overflows a bucket
+    regrows the capacities: exactly one retrace on the next dispatch, and
+    ``ds.stats()["regrows"]`` counts it. With ``max_cached=``, evicted
+    signatures recompile on next use (counted by both counters).
+    """
+
+    def __init__(self, *, engine: FigaroEngine | None = None, mesh=None,
+                 shard_axis: str = "data", dtype=None, bucket: bool = True,
+                 headroom: int = 0, method: str = "tsqr",
+                 leaf_rows: int = 256, panel: int = 32,
+                 use_kernel: bool = False, donate_data: bool | None = None,
+                 max_cached: int | None = None):
+        if engine is not None and (max_cached is not None
+                                   or donate_data is not None):
+            raise ValueError("pass max_cached=/donate_data= to the engine's "
+                             "constructor when supplying engine=")
+        self.engine = engine if engine is not None else FigaroEngine(
+            donate_data=bool(donate_data), max_cached=max_cached)
+        self.mesh = mesh
+        self.shard_axis = shard_axis
+        self.dtype = dtype
+        self.bucket = bucket
+        self.headroom = headroom
+        self.method = method
+        self.leaf_rows = leaf_rows
+        self.panel = panel
+        self.use_kernel = use_kernel
+
+    # -- dataset construction ------------------------------------------------
+
+    def ingest(self, tables) -> "TableSet":
+        """Wrap raw tables for the fluent chain: ``ingest(t).join(root, e)``.
+
+        ``tables`` is either a ready `Database` or the
+        ``{name: (key_columns, data_matrix, column_names)}`` mapping of
+        `Database.from_arrays`.
+        """
+        if isinstance(tables, Database):
+            return TableSet(self, tables)
+        if isinstance(tables, dict):
+            return TableSet(self, Database.from_arrays(tables))
+        raise TypeError(
+            f"ingest() expects a Database or a {{name: (keys, data, cols)}} "
+            f"dict, got {type(tables).__name__}")
+
+    def from_tree(self, tree: JoinTree) -> "JoinDataset":
+        """A `JoinDataset` over an existing `JoinTree`."""
+        if not isinstance(tree, JoinTree):
+            raise TypeError(f"from_tree() expects a JoinTree, "
+                            f"got {type(tree).__name__}")
+        return JoinDataset(self, tree)
+
+    # -- option resolution ---------------------------------------------------
+
+    def _dtype_for(self, kind: str, override):
+        if override is not None:
+            return override
+        if self.dtype is not None:
+            return self.dtype
+        return _KIND_DTYPES[kind]
+
+    def _post_opts(self, kind: str, dtype, method, leaf_rows, panel,
+                   use_kernel) -> dict:
+        return dict(
+            dtype=self._dtype_for(kind, dtype),
+            method=self.method if method is None else method,
+            leaf_rows=self.leaf_rows if leaf_rows is None else leaf_rows,
+            panel=self.panel if panel is None else panel,
+            use_kernel=self.use_kernel if use_kernel is None else use_kernel)
+
+    @staticmethod
+    def _is_batched(data, batched) -> bool:
+        """A leading batch axis ([B, m_i, n_i] leaves) switches to the
+        batched (vmapped) dispatch; per-node plan data is always 2-D."""
+        if batched is not None:
+            return batched
+        if data is None:
+            return False
+        leaves = list(data)
+        return bool(leaves) and np.ndim(leaves[0]) == 3
+
+    def _shard_for(self, batched: bool):
+        if not batched or self.mesh is None:
+            return None
+        return (self.mesh, self.shard_axis)
+
+    def _dispatch_opts(self, data, batched, shard, bucket):
+        batched = self._is_batched(data, batched)
+        return dict(
+            batched=batched,
+            shard=self._shard_for(batched) if shard is _UNSET else shard,
+            bucket=self.bucket if bucket is None else bucket)
+
+    # -- plan-level compute (the legacy delegation surface) ------------------
+
+    def r0(self, tree_or_plan, data=None, *, batched=None, shard=_UNSET,
+           bucket=None, dtype=None, use_kernel=None):
+        """R₀ of Algorithm 2 under this session's configuration."""
+        return self.engine.r0(
+            plan_for(tree_or_plan), data,
+            dtype=self._dtype_for("r0", dtype),
+            use_kernel=self.use_kernel if use_kernel is None else use_kernel,
+            **self._dispatch_opts(data, batched, shard, bucket))
+
+    def qr(self, tree_or_plan, data=None, *, batched=None, shard=_UNSET,
+           bucket=None, dtype=None, method=None, leaf_rows=None, panel=None,
+           use_kernel=None):
+        """Upper-triangular R of the join's QR ([B, N, N] when batched)."""
+        return self.engine.qr(
+            plan_for(tree_or_plan), data,
+            **self._post_opts("qr", dtype, method, leaf_rows, panel,
+                              use_kernel),
+            **self._dispatch_opts(data, batched, shard, bucket))
+
+    def svd(self, tree_or_plan, data=None, *, k: int | None = None,
+            batched=None, shard=_UNSET, bucket=None, dtype=None, method=None,
+            leaf_rows=None, panel=None, use_kernel=None):
+        """Singular values + right-singular vectors; ``k`` keeps the top-k."""
+        s, vt = self.engine.svd(
+            plan_for(tree_or_plan), data,
+            **self._post_opts("svd", dtype, method, leaf_rows, panel,
+                              use_kernel),
+            **self._dispatch_opts(data, batched, shard, bucket))
+        if k is not None:
+            s, vt = s[..., :k], vt[..., :k, :]
+        return s, vt
+
+    def pca(self, tree_or_plan, data=None, *, k: int | None = None,
+            center: bool = True, batched=None, shard=_UNSET, bucket=None,
+            dtype=None, method=None, leaf_rows=None, panel=None,
+            use_kernel=None):
+        """PCA of the join matrix from R (+ factorized means)."""
+        return self.engine.pca(
+            plan_for(tree_or_plan), data, k=k, center=center,
+            **self._post_opts("pca", dtype, method, leaf_rows, panel,
+                              use_kernel),
+            **self._dispatch_opts(data, batched, shard, bucket))
+
+    def least_squares(self, tree_or_plan, label_col: int, data=None, *,
+                      ridge: float = 0.0, batched=None, shard=_UNSET,
+                      bucket=None, dtype=None, method=None, leaf_rows=None,
+                      panel=None, use_kernel=None):
+        """argmin_β ‖A[:, feats]·β − A[:, label]‖² over the join."""
+        return self.engine.least_squares(
+            plan_for(tree_or_plan), label_col, data, ridge=ridge,
+            **self._post_opts("least_squares", dtype, method, leaf_rows,
+                              panel, use_kernel),
+            **self._dispatch_opts(data, batched, shard, bucket))
+
+    def serve(self, tree_or_plan, *, kind: str = "qr", label_col=None,
+              k=None, ridge: float = 0.0, dtype=None, method=None,
+              leaf_rows=None, mesh=_UNSET, shard_axis=None):
+        """A batched `FigaroServer` for one join structure (see
+        `train.serve.make_figaro_server`); engine/mesh/dtype default to this
+        session's configuration."""
+        from repro.train.serve import make_figaro_server
+
+        if kind not in _SERVE_KINDS:
+            raise ValueError(f"unknown serve kind {kind!r}; supported kinds: "
+                             f"{', '.join(sorted(_SERVE_KINDS))}")
+        return make_figaro_server(
+            plan_for(tree_or_plan), kind=kind, label_col=label_col, k=k,
+            ridge=ridge, engine=self.engine,
+            dtype=self._dtype_for(_SERVE_KINDS[kind], dtype),
+            method=self.method if method is None else method,
+            leaf_rows=self.leaf_rows if leaf_rows is None else leaf_rows,
+            mesh=self.mesh if mesh is _UNSET else mesh,
+            shard_axis=self.shard_axis if shard_axis is None else shard_axis)
+
+    def partitioned_qr(self, tree: JoinTree, num_parts: int, *, mesh=_UNSET,
+                       dtype=None, method=None, use_kernel=None):
+        """Fact-partitioned multi-device QR (`distributed` layer) through
+        this session's engine/mesh."""
+        from repro.core.distributed import partitioned_figaro_qr
+
+        return partitioned_figaro_qr(
+            tree, num_parts, engine=self.engine,
+            mesh=self.mesh if mesh is _UNSET else mesh,
+            dtype=(dtype if dtype is not None else
+                   self.dtype if self.dtype is not None else jnp.float64),
+            method=self.method if method is None else method,
+            use_kernel=self.use_kernel if use_kernel is None else use_kernel)
+
+
+@dataclasses.dataclass
+class TableSet:
+    """Ingested tables awaiting a join choice: ``ingest(t).join(root, edges)``."""
+
+    session: Session
+    db: Database
+
+    def join(self, root: str, edges, *, reduce: bool = True) -> "JoinDataset":
+        """Fix the join tree (edges in any orientation, re-rooted at
+        ``root``); ``reduce`` drops dangling tuples first (`full_reduce`),
+        which the FiGaRo pipeline requires of its inputs."""
+        db = full_reduce(self.db, list(edges)) if reduce else self.db
+        return JoinDataset(self.session,
+                           JoinTree.from_edges(db, root, list(edges)))
+
+
+class JoinDataset:
+    """One join's plan lifecycle + fluent compute handle.
+
+    The capacity plan is built lazily on first compute
+    (`plan_cache.build_capacity_plan` under the session's
+    ``bucket``/``headroom`` policy) and refreshed in place by
+    ``append(...)`` (`plan_cache.refresh_plan`): appends that stay within
+    the bucketed capacities keep the plan signature, so the next dispatch
+    reuses the cached executable with **zero retraces** — ``stats()``
+    surfaces the trace/eviction counters and per-node capacity vs live rows
+    so callers can assert that instead of guessing.
+
+    Compute methods (``qr`` / ``svd`` / ``pca`` / ``lsq`` and raw ``r0``)
+    read everything off the factorized R. Passing ``data`` overrides the
+    ingested tables' values: 2-D per-node leaves dispatch a single pipeline;
+    a leading batch axis ([B, rows_i, n_i]) switches to the batched
+    (vmapped) dispatch — sharded over the session's mesh when it has one.
+    Request leaves sized to the *live* row counts are zero-padded up to
+    capacity here; any other row count raises (a stale batch built before an
+    ``append`` must be rebuilt, not silently zero-filled).
+    """
+
+    def __init__(self, session: Session, tree: JoinTree):
+        self._session = session
+        self._tree = tree
+        self._plan: FigaroPlan | None = None
+        self._appends = 0
+        self._regrows = 0
+
+    # -- plan lifecycle ------------------------------------------------------
+
+    @property
+    def tree(self) -> JoinTree:
+        return self._tree
+
+    @property
+    def plan(self) -> FigaroPlan:
+        """The capacity plan (built lazily on first access)."""
+        if self._plan is None:
+            if self._session.bucket:
+                self._plan = build_capacity_plan(
+                    self._tree, headroom=self._session.headroom)
+            else:
+                self._plan = self._exact_capacity_plan(self._tree)
+        return self._plan
+
+    def _exact_capacity_plan(self, tree: JoinTree) -> FigaroPlan:
+        # Exact capacities: bit-identical numerics to the exact plan, but
+        # any append overflows and regrows (one retrace each).
+        exact = build_plan(tree)
+        plan = pad_plan(exact, exact.spec)
+        plan.source_tree = tree
+        plan.capacity_headroom = self._session.headroom
+        return plan
+
+    def append(self, node: str, keys, rows) -> bool:
+        """Append rows to one relation; returns True when the refresh stayed
+        within the plan's capacities (next dispatch is launch-only).
+
+        ``keys`` maps key-attribute name -> integer array, ``rows`` is a
+        [rows, n_i] data matrix — the `plan_cache.refresh_plan` convention.
+        Before the first compute the tables are simply grown (the capacity
+        plan has not been built yet, so there is nothing to refresh).
+        """
+        self._appends += 1
+        if self._plan is None:
+            rels = dict(self._tree.db.relations)
+            if node not in rels:
+                raise KeyError(f"unknown relation {node!r}; "
+                               f"have {sorted(rels)}")
+            rels[node] = _append_rows(rels[node], keys, rows)
+            self._tree = JoinTree(Database(rels), dict(self._tree.parent))
+            return True
+        new_plan = refresh_plan(self._plan, {node: (keys, rows)})
+        in_capacity = new_plan.spec == self._plan.spec
+        if not in_capacity:
+            self._regrows += 1
+            if not self._session.bucket:
+                # Keep the session's bucket=False contract on regrow:
+                # refresh_plan grows into power-of-two buckets, but this
+                # dataset's capacities must stay exact (bit-identical path,
+                # one retrace per append).
+                new_plan = self._exact_capacity_plan(new_plan.source_tree)
+        self._plan = new_plan
+        self._tree = new_plan.source_tree
+        return in_capacity
+
+    def stats(self) -> dict:
+        """Lifecycle + compile counters: per-node capacity vs live rows,
+        appends/regrows, and the session engine's per-kind trace counts,
+        eviction counts, and cache size. A zero-retrace append shows up as
+        ``traces`` staying flat across dispatches."""
+        engine = self._session.engine
+        nodes = {}
+        if self._plan is not None:
+            for sp, ix in zip(self._plan.spec.nodes, self._plan.index):
+                live = int(ix.row_mask.sum()) if ix.row_mask is not None \
+                    else sp.m
+                nodes[sp.name] = {"capacity_rows": sp.m, "live_rows": live}
+        else:
+            for name in self._tree.preorder():
+                nodes[name] = {"capacity_rows": None,
+                               "live_rows": self._tree.db[name].num_rows}
+        return {
+            "plan_built": self._plan is not None,
+            "appends": self._appends,
+            "regrows": self._regrows,
+            "nodes": nodes,
+            "traces": self._session.engine.trace_counts(),
+            "trace_count": engine.trace_count(),
+            "evictions": engine.eviction_count(),
+            "cached_executables": engine.cache_size(),
+        }
+
+    # -- column naming -------------------------------------------------------
+
+    @property
+    def columns(self) -> tuple[str, ...]:
+        """Qualified global column names (``"Node.attr"``) in the plan's
+        preorder column layout."""
+        return tuple(f"{name}.{a}" for name in self._tree.preorder()
+                     for a in self._tree.db[name].data_attrs)
+
+    def column_index(self, col) -> int:
+        """Global column index of ``col``: an int (validated), a bare
+        attribute name (must be unique across relations), or a qualified
+        ``"Node.attr"``."""
+        cols = self.columns
+        if isinstance(col, (int, np.integer)):
+            if not 0 <= int(col) < len(cols):
+                raise IndexError(f"column index {col} out of range "
+                                 f"[0, {len(cols)})")
+            return int(col)
+        if not isinstance(col, str):
+            raise TypeError(f"column must be an int or str, "
+                            f"got {type(col).__name__}")
+        if "." in col:
+            if col in cols:
+                return cols.index(col)
+            raise KeyError(f"unknown column {col!r}; have {list(cols)}")
+        hits = [i for i, c in enumerate(cols) if c.split(".", 1)[1] == col]
+        if not hits:
+            raise KeyError(f"unknown column {col!r}; have {list(cols)}")
+        if len(hits) > 1:
+            raise KeyError(f"column name {col!r} is ambiguous: "
+                           f"{[cols[i] for i in hits]} — qualify it")
+        return hits[0]
+
+    # -- compute -------------------------------------------------------------
+
+    def _request_data(self, data):
+        """Pad live-sized request leaves up to capacity (see class doc)."""
+        if data is None:
+            return None
+        plan = self.plan
+        data = tuple(data)
+        if len(data) != len(plan.spec.nodes):
+            raise ValueError(
+                f"expected one data leaf per relation "
+                f"({len(plan.spec.nodes)}: {list(plan.spec.names)}), "
+                f"got {len(data)}")
+        sizes = [(int(ix.row_mask.sum()) if ix.row_mask is not None
+                  else sp.m, sp)
+                 for sp, ix in zip(plan.spec.nodes, plan.index)]
+        if all(np.shape(d)[-2] == sp.m for d, (_, sp) in zip(data, sizes)):
+            return data  # already capacity-shaped: no host round trip
+        for d, (live, sp) in zip(data, sizes):
+            if np.shape(d)[-2] not in (live, sp.m):
+                raise ValueError(
+                    f"{sp.name}: request data has {np.shape(d)[-2]} rows; "
+                    f"expected the live size ({live}) or the capacity "
+                    f"({sp.m}) — rebuild request buffers after append()")
+        return pad_data(data, plan.spec)
+
+    def r0(self, data=None, **overrides):
+        return self._session.r0(self.plan, self._request_data(data),
+                                **overrides)
+
+    def qr(self, data=None, **overrides):
+        """R of the join's QR; ``data`` with a leading batch axis serves the
+        whole batch in one (mesh-sharded, when configured) dispatch."""
+        return self._session.qr(self.plan, self._request_data(data),
+                                **overrides)
+
+    def svd(self, data=None, *, k: int | None = None, **overrides):
+        """(s, Vᵀ) of the join matrix; ``k`` keeps the top-k."""
+        return self._session.svd(self.plan, self._request_data(data), k=k,
+                                 **overrides)
+
+    def pca(self, data=None, *, k: int | None = None, center: bool = True,
+            **overrides):
+        """`PCAResult` (components, explained variance, factorized mean)."""
+        return self._session.pca(self.plan, self._request_data(data), k=k,
+                                 center=center, **overrides)
+
+    def lsq(self, y, data=None, *, ridge: float = 0.0, **overrides):
+        """Closed-form linear regression of label column ``y`` (index, bare
+        name, or ``"Node.attr"``) against all other columns."""
+        return self._session.least_squares(
+            self.plan, self.column_index(y), self._request_data(data),
+            ridge=ridge, **overrides)
+
+    def serve(self, kind: str = "qr", *, label_col=None, **kw):
+        """A batched `FigaroServer` over this dataset's capacity plan.
+
+        The server holds its own reference to the plan: use
+        ``server.append(...)`` for online refreshes while serving (this
+        dataset's ``append`` does not reach into live servers).
+        """
+        if label_col is not None:
+            label_col = self.column_index(label_col)
+        return self._session.serve(self.plan, kind=kind, label_col=label_col,
+                                   **kw)
+
+
+_DEFAULT_SESSION: Session | None = None
+
+
+def default_session() -> Session:
+    """Process-wide `Session` behind the legacy module-level entry points
+    (`figaro_qr`, `svd_over_join`, ...): shares `default_engine()`'s
+    executable cache and keeps the pre-Session defaults (no bucketing, no
+    mesh, per-kind dtypes)."""
+    global _DEFAULT_SESSION
+    if _DEFAULT_SESSION is None:
+        _DEFAULT_SESSION = Session(engine=default_engine(), bucket=False)
+    return _DEFAULT_SESSION

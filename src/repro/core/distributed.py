@@ -199,9 +199,12 @@ def partitioned_figaro_qr(
 
     Per-partition programs are independent (different static shapes — in
     production each runs on its own pod). Each partition dispatches through
-    the shared `FigaroEngine`, whose executable cache keys on the partition's
-    plan signature — repeat calls (elastic re-dispatch, refreshed data) reuse
-    the compiled programs instead of re-tracing per call.
+    the shared `FigaroEngine` (default: the `repro.api.default_session()`
+    engine, so partitions share executables with the rest of the façade),
+    whose executable cache keys on the partition's plan signature — repeat
+    calls (elastic re-dispatch, refreshed data) reuse the compiled programs
+    instead of re-tracing per call. `figaro.Session.partitioned_qr` is the
+    façade form (session engine/mesh/dtype defaults).
 
     Without a ``mesh`` the partitions run (async) on the default device and
     the partial R factors are TSQR-combined locally. With a ``mesh`` each
@@ -210,9 +213,10 @@ def partitioned_figaro_qr(
     concurrently) and the stacked partial Rs are combined on the mesh itself
     via `distributed_postprocess_r0`'s butterfly.
     """
-    from .engine import default_engine
+    if engine is None:
+        from repro.api import default_session
 
-    engine = engine if engine is not None else default_engine()
+        engine = default_session().engine
     parts = partition_fact_table(tree, num_parts)
     if mesh is None:
         rs = [engine.qr(build_plan(t), dtype=dtype, method=method,

@@ -36,7 +36,12 @@ pytree argument:
     padding: an append that keeps the bucketed signature is retrace-free.
 
 Trace counts are tracked per pipeline kind (`trace_count`) so tests and
-benchmarks can assert cache hits instead of guessing.
+benchmarks can assert cache hits instead of guessing. ``max_cached=`` bounds
+the per-kind executable cache with LRU eviction (`eviction_count`) — without
+it, heavy multi-tenant bucket misses grow the cache without bound.
+
+`repro.api` (`repro.figaro`) wraps this engine in the user-facing
+`Session` / `JoinDataset` façade; new code should usually start there.
 """
 
 from __future__ import annotations
@@ -59,7 +64,7 @@ from .join_tree import FigaroPlan, JoinTree, build_plan
 from .plan_cache import bucket_spec, pad_data, pad_plan
 from .postprocess import postprocess_r0
 
-__all__ = ["FigaroEngine", "PCAResult", "default_engine"]
+__all__ = ["FigaroEngine", "PCAResult", "default_engine", "plan_for"]
 
 
 def _bucketize(plan: FigaroPlan, data):
@@ -116,6 +121,14 @@ class FigaroEngine:
     ``plan.data`` are never donated — the plan stays reusable. Pass
     ``donate_data=False`` when callers re-dispatch the same buffers
     (benchmark loops).
+
+    ``max_cached=`` caps the number of cached executables **per pipeline
+    kind** (``qr``, ``qr_batched``, ...). The cache is LRU: dispatching a new
+    signature past the cap evicts the least-recently-used executable of that
+    kind (its compiled program is dropped); re-dispatching an evicted
+    signature recompiles (visible in `trace_count`). Evictions are counted
+    per kind next to the trace counters — `eviction_count(kind)`. The default
+    (``None``) keeps every executable, the pre-existing behavior.
     """
 
     _STATIC = {
@@ -135,10 +148,20 @@ class FigaroEngine:
                                   "leaf_rows", "panel", "use_kernel"),
     }
 
-    def __init__(self, *, donate_data: bool = True):
+    def __init__(self, *, donate_data: bool = True,
+                 max_cached: int | None = None):
+        if max_cached is not None and max_cached < 1:
+            raise ValueError(f"max_cached must be >= 1 or None, "
+                             f"got {max_cached}")
         self.donate_data = donate_data
+        self.max_cached = max_cached
         self._trace_counts: collections.Counter = collections.Counter()
-        self._jitted: dict = {}
+        self._evictions: collections.Counter = collections.Counter()
+        # Executable cache, keyed on the FULL dispatch signature (kind, mesh,
+        # plan treedef + leaf shapes/dtypes, static options) with one jit
+        # wrapper per entry, so eviction can drop exactly one executable.
+        # Insertion/access order is the LRU order.
+        self._jitted: collections.OrderedDict = collections.OrderedDict()
 
     # -- cache plumbing ------------------------------------------------------
 
@@ -149,8 +172,58 @@ class FigaroEngine:
             return sum(self._trace_counts.values())
         return self._trace_counts[kind]
 
+    def trace_counts(self) -> dict[str, int]:
+        """Per-kind trace counts as a plain dict (for stats surfaces)."""
+        return {k: int(v) for k, v in sorted(self._trace_counts.items())}
+
+    def eviction_count(self, kind: str | None = None) -> int:
+        """Executables evicted by the ``max_cached`` LRU policy (0 when
+        unbounded); tracked per kind, next to the trace counters."""
+        if kind is None:
+            return sum(self._evictions.values())
+        return self._evictions[kind]
+
+    def cache_size(self, kind: str | None = None) -> int:
+        """Number of live cached executables (per kind, or total)."""
+        if kind is None:
+            return len(self._jitted)
+        return sum(1 for k in self._jitted if k[0] == kind)
+
     def _bump(self, kind: str) -> None:
         self._trace_counts[kind] += 1
+
+    @staticmethod
+    def _abstract(leaves) -> tuple:
+        return tuple((np.shape(l), np.dtype(getattr(l, "dtype", None)
+                                            or np.asarray(l).dtype).str)
+                     for l in leaves)
+
+    def _signature(self, kind: str, plan: FigaroPlan, data, donate: bool,
+                   mesh, axis, options) -> tuple:
+        """Hashable key covering everything a dispatch compiles against.
+
+        The plan half (treedef + index-leaf shapes/dtypes) is cached on the
+        plan object: flattening ~dozens of leaves per dispatch costs ~100µs,
+        and plan lifecycles (`plan_cache.refresh_plan`, `with_data`) replace
+        plan objects rather than mutating array shapes in place."""
+        plan_sig = getattr(plan, "_engine_sig", None)
+        if plan_sig is None:
+            leaves, treedef = jax.tree_util.tree_flatten(plan.without_data())
+            plan_sig = plan._engine_sig = (treedef, self._abstract(leaves))
+        return (kind, donate, mesh, axis, plan_sig,
+                self._abstract(data), tuple(sorted(options.items())))
+
+    def _evict_lru(self, kind: str) -> None:
+        """Drop least-recently-used executables of ``kind`` past the cap."""
+        if self.max_cached is None:
+            return
+        while self.cache_size(kind) > self.max_cached:
+            oldest = next(k for k in self._jitted if k[0] == kind)
+            fn = self._jitted.pop(oldest)
+            clear = getattr(fn, "clear_cache", None)
+            if clear is not None:  # free the compiled program eagerly
+                clear()
+            self._evictions[kind] += 1
 
     @staticmethod
     def _normalize_shard(shard) -> tuple[Mesh | None, str | None]:
@@ -191,6 +264,8 @@ class FigaroEngine:
 
     def _dispatch(self, kind: str, plan: FigaroPlan, data, *, shard=None,
                   bucket: bool = False, **options):
+        if not isinstance(plan, FigaroPlan):
+            raise TypeError(_plan_arg_error("plan", plan))
         if bucket:
             plan, data = _bucketize(plan, data)
         mesh, axis = self._normalize_shard(shard)
@@ -233,15 +308,20 @@ class FigaroEngine:
                     for d in data)
                 donate = self.donate_data  # padded buffers are fresh
             data = jax.device_put(data, NamedSharding(mesh, P(axis)))
-        key = (kind, donate, mesh, axis)
-        if key not in self._jitted:
-            self._jitted[key] = self._make_jitted(kind, donate, mesh, axis)
+        key = self._signature(kind, plan, data, donate, mesh, axis, options)
+        fn = self._jitted.get(key)
+        if fn is None:
+            fn = self._jitted[key] = self._make_jitted(kind, donate, mesh,
+                                                       axis)
+            self._evict_lru(kind)
+        else:
+            self._jitted.move_to_end(key)  # LRU: most-recent at the tail
         with warnings.catch_warnings():
             # On backends without donation (CPU) jax warns per dispatch;
             # semantics are unchanged, so keep serving loops quiet.
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable")
-            out = self._jitted[key](plan.without_data(), data, **options)
+            out = fn(plan.without_data(), data, **options)
         if pad:
             out = jax.tree.map(lambda x: x[:b], out)
         return out
@@ -439,6 +519,31 @@ class FigaroEngine:
             leaf_rows=leaf_rows, panel=panel, use_kernel=use_kernel)
 
 
+def _plan_arg_error(arg_name: str, value) -> str:
+    """A clear TypeError message for a non-plan handed to a plan argument.
+
+    Without this, a `Database` or a raw ``{name: array}`` table dict sinks
+    into pytree flattening and surfaces as a deep, unrelated error."""
+    from .relation import Database
+
+    got = type(value).__name__
+    if isinstance(value, Database):
+        hint = ("a Database is not executable yet — pick a join tree first: "
+                "JoinTree.from_edges(db, root, edges), or use the façade: "
+                "repro.figaro.Session().ingest(db).join(root, edges)")
+    elif isinstance(value, dict) or (
+            isinstance(value, (list, tuple)) and value
+            and isinstance(value[0], np.ndarray)):
+        hint = ("raw tables must be ingested first: "
+                "repro.figaro.Session().ingest(tables).join(root, edges), or "
+                "Database.from_arrays(tables) + JoinTree.from_edges")
+    else:
+        hint = ("build one with join_tree.build_plan(tree) or "
+                "plan_cache.build_capacity_plan(tree)")
+    return (f"argument {arg_name!r} must be a JoinTree or FigaroPlan, "
+            f"got {got}: {hint}")
+
+
 _DEFAULT_ENGINE: FigaroEngine | None = None
 
 
@@ -453,7 +558,13 @@ def default_engine() -> FigaroEngine:
 
 
 def plan_for(tree_or_plan: JoinTree | FigaroPlan) -> FigaroPlan:
-    """Accept either a `JoinTree` (compiled here) or a ready `FigaroPlan`."""
+    """Accept either a `JoinTree` (compiled here) or a ready `FigaroPlan`.
+
+    Anything else — a `Database`, a raw table dict — raises a `TypeError`
+    naming the offending argument instead of failing deep inside pytree
+    flattening."""
     if isinstance(tree_or_plan, FigaroPlan):
         return tree_or_plan
-    return build_plan(tree_or_plan)
+    if isinstance(tree_or_plan, JoinTree):
+        return build_plan(tree_or_plan)
+    raise TypeError(_plan_arg_error("tree_or_plan", tree_or_plan))

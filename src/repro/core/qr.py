@@ -2,11 +2,12 @@
 
 `figaro_qr` is the paper's pipeline: plan → counts → Algorithm 2 → post-process.
 `figaro_qr_batched` is the serving form — one compiled dispatch factorizes B
-feature-sets over the same join structure. Both route through the shared
-`FigaroEngine` (`repro.core.engine`), so repeat calls with same-signature
-plans hit cached executables. `materialized_qr` / `givens_qr_r` are the
-baselines the paper benchmarks against (LAPACK Householder on the join
-output / textbook Givens rotations).
+feature-sets over the same join structure. Both are thin delegations onto the
+process-wide `repro.api.default_session()` (the `repro.figaro` façade), so
+repeat calls with same-signature plans hit its engine's cached executables;
+new code should use `figaro.Session` / `JoinDataset` directly.
+`materialized_qr` / `givens_qr_r` are the baselines the paper benchmarks
+against (LAPACK Householder on the join output / textbook Givens rotations).
 """
 
 from __future__ import annotations
@@ -14,10 +15,17 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .engine import default_engine, plan_for
 from .join_tree import FigaroPlan, JoinTree
 from .materialize import materialize_join
 from .postprocess import householder_qr_r, normalize_sign
+
+
+def _session():
+    # Lazy: repro.api imports repro.core.engine; importing it at module top
+    # would cycle through repro.core.__init__ during a cold `import repro.api`.
+    from repro.api import default_session
+
+    return default_session()
 
 __all__ = [
     "figaro_qr",
@@ -39,9 +47,9 @@ def figaro_qr(
     use_kernel: bool = False,
 ) -> jnp.ndarray:
     """Upper-triangular R of the QR decomposition of the (unmaterialized) join."""
-    plan = plan_for(tree_or_plan)
-    return default_engine().qr(plan, data, dtype=dtype, method=method,
-                               leaf_rows=leaf_rows, use_kernel=use_kernel)
+    return _session().qr(tree_or_plan, data, batched=False, dtype=dtype,
+                         method=method, leaf_rows=leaf_rows,
+                         use_kernel=use_kernel)
 
 
 def figaro_qr_batched(
@@ -55,10 +63,9 @@ def figaro_qr_batched(
 ) -> jnp.ndarray:
     """R for a batch of feature-sets over one join structure: ``data_batch[i]``
     is [B, m_i, n_i]; returns [B, N, N] from a single compiled dispatch."""
-    plan = plan_for(tree_or_plan)
-    return default_engine().qr(plan, data_batch, batched=True, dtype=dtype,
-                               method=method, leaf_rows=leaf_rows,
-                               use_kernel=use_kernel)
+    return _session().qr(tree_or_plan, data_batch, batched=True, dtype=dtype,
+                         method=method, leaf_rows=leaf_rows,
+                         use_kernel=use_kernel)
 
 
 def figaro_qr_fn(plan: FigaroPlan, *, dtype=jnp.float32,

@@ -5,18 +5,27 @@ vectors of A == those of R; RᵀR is the Cholesky factorization of AᵀA; the
 least-squares solution against a label column is back-substitution on the R of
 the label-extended matrix. None of it touches the join output.
 
-All entry points route through the shared `FigaroEngine`: one compiled
+All entry points are thin delegations onto the process-wide
+`repro.api.default_session()` (the `repro.figaro` façade): one compiled
 executable per plan signature covers plan → counts → rotations → post-process
 → downstream read, and `batched=True` serves a leading batch axis of
-feature-sets per dispatch.
+feature-sets per dispatch. New code should use `figaro.Session` /
+`JoinDataset` (``ds.svd() / ds.pca(k=) / ds.lsq(y)``) directly.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .engine import PCAResult, default_engine, plan_for
+from .engine import PCAResult
 from .join_tree import FigaroPlan
+
+
+def _session():
+    # Lazy: avoids a circular import through repro.core.__init__ (see qr.py).
+    from repro.api import default_session
+
+    return default_session()
 
 __all__ = [
     "svd_over_join",
@@ -34,9 +43,8 @@ def svd_over_join(tree_or_plan, data=None, *, batched: bool = False,
     Returns (s [N], Vt [N, N]); the implicit U is A·V·diag(1/s) (never built).
     With ``batched=True`` and [B, m_i, n_i] data leaves: (s [B, N], Vt [B, N, N]).
     """
-    plan = plan_for(tree_or_plan)
-    return default_engine().svd(plan, data, batched=batched, dtype=dtype,
-                                **qr_kwargs)
+    return _session().svd(tree_or_plan, data, batched=batched, dtype=dtype,
+                          **qr_kwargs)
 
 
 def join_column_moments(plan: FigaroPlan, data=None, *, dtype=jnp.float64):
@@ -60,9 +68,8 @@ def pca_over_join(tree_or_plan, k: int | None = None, *, data=None,
     cov = (AᵀA − J·μμᵀ)/(J−1) = (RᵀR − J·μμᵀ)/(J−1); eigendecomposition of an
     N×N matrix — independent of the join size.
     """
-    plan = plan_for(tree_or_plan)
-    return default_engine().pca(plan, data, k=k, center=center, dtype=dtype,
-                                **qr_kwargs)
+    return _session().pca(tree_or_plan, data, k=k, center=center,
+                          dtype=dtype, **qr_kwargs)
 
 
 def least_squares_over_join(tree_or_plan, label_col: int, *, data=None,
@@ -76,6 +83,5 @@ def least_squares_over_join(tree_or_plan, label_col: int, *, data=None,
     Returns (beta [N-1], residual_norm) — the closed-form linear-regression
     training the paper cites as the driving ML application.
     """
-    plan = plan_for(tree_or_plan)
-    return default_engine().least_squares(plan, label_col, data, ridge=ridge,
-                                          dtype=dtype, **qr_kwargs)
+    return _session().least_squares(tree_or_plan, label_col, data,
+                                    ridge=ridge, dtype=dtype, **qr_kwargs)

@@ -15,6 +15,15 @@ Scaled-down analogues of the three real datasets (Table 1):
 
 Sizes are parameterized so benchmarks can sweep "percentage of dataset"
 exactly like Fig 4.
+
+Every generator returns a ready `JoinTree`; the one-liner onto the
+`repro.figaro` façade is::
+
+    from repro import figaro
+    from repro.data.relational import retailer_like
+
+    ds = figaro.Session().from_tree(retailer_like(scale=1000))
+    r = ds.qr()                      # or ds.svd() / ds.pca(k=) / ds.lsq(y)
 """
 
 from __future__ import annotations
@@ -34,7 +43,11 @@ def _rand_data(rng, m, n):
 
 def retailer_like(scale: int = 1000, *, cols: int = 4, seed: int = 0,
                   root: str = "good") -> JoinTree:
-    """Snowflake; `root` in {good, bad} mirrors Table 2's join-tree choice."""
+    """Snowflake; `root` in {good, bad} mirrors Table 2's join-tree choice.
+
+    ``figaro.Session().from_tree(retailer_like(...))`` gives the fluent
+    compute handle (examples/join_ml.py runs all three ML tasks off it).
+    """
     rng = np.random.default_rng(seed)
     n_loc, n_item, n_date = max(scale // 50, 4), max(scale // 20, 6), \
         max(scale // 10, 8)
@@ -103,7 +116,11 @@ def favorita_like(scale: int = 1000, *, cols: int = 3, seed: int = 1) -> JoinTre
 
 
 def yelp_like(scale: int = 300, *, cols: int = 3, seed: int = 2) -> JoinTree:
-    """Many-to-many: |join| >> |input| (the paper's best-case regime)."""
+    """Many-to-many: |join| >> |input| (the paper's best-case regime).
+
+    The api parity suite (tests/test_api.py) pins the `figaro.Session` path
+    bit-identical to the legacy entry points on this schema.
+    """
     rng = np.random.default_rng(seed)
     n_user, n_biz = max(scale // 10, 5), max(scale // 15, 4)
     m_rev = scale * 2

@@ -1,0 +1,17 @@
+"""`repro.figaro` — the public façade of the join-factorization stack.
+
+Alias of `repro.api` (kept separate so ``from repro import figaro`` reads
+like the paper: ``figaro.Session``, ``sess.ingest(...).join(...)``,
+``ds.qr() / ds.svd() / ds.pca() / ds.lsq()``). See `repro.api` for the full
+API reference and the legacy -> Session migration table.
+
+Not to be confused with `repro.core.figaro`, the Algorithm-2 kernel this
+façade ultimately dispatches.
+"""
+
+from repro.api import (JoinDataset, Session, TableSet,  # noqa: F401
+                       default_session)
+from repro.core.engine import FigaroEngine, PCAResult  # noqa: F401
+
+__all__ = ["Session", "TableSet", "JoinDataset", "default_session",
+           "FigaroEngine", "PCAResult"]

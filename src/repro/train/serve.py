@@ -31,7 +31,10 @@ from repro.models.config import ModelConfig
 from repro.sharding.rules import data_axes
 
 __all__ = ["make_prefill", "make_decode_step", "cache_specs", "sample_loop",
-           "make_figaro_server", "FigaroServer"]
+           "make_figaro_server", "FigaroServer", "SERVE_KINDS"]
+
+#: Supported `make_figaro_server` kinds (validated eagerly at construction).
+SERVE_KINDS = ("qr", "svd", "pca", "lsq")
 
 
 class FigaroServer:
@@ -133,34 +136,34 @@ def make_figaro_server(plan: FigaroPlan, *, kind: str = "qr",
     The engine donates request buffers (they are consumed by the dispatch that
     answers them) and compiles once per plan signature — subsequent batches,
     and other plans with the same signature, are launch-only.
+
+    `repro.figaro` (`Session.serve` / `JoinDataset.serve`) is the façade over
+    this constructor — it fills engine/mesh/dtype from the session config and
+    resolves ``label_col`` by column name.
     """
+    # Validate up front — a bad kind must fail at construction with the full
+    # list of supported kinds, not at (or after) the first dispatch.
+    if kind not in SERVE_KINDS:
+        raise ValueError(f"unknown serve kind {kind!r}; supported kinds: "
+                         f"{', '.join(SERVE_KINDS)}")
+    if kind == "lsq" and label_col is None:
+        raise ValueError("kind='lsq' needs label_col")
+    if not isinstance(plan, FigaroPlan):
+        from repro.core.engine import _plan_arg_error
+
+        raise TypeError(_plan_arg_error("plan", plan))
     engine = engine if engine is not None else FigaroEngine(donate_data=True)
     shard = None if mesh is None else (mesh, shard_axis)
 
-    if kind == "qr":
-        def dispatch(plan, data_batch):
-            return engine.qr(plan, data_batch, batched=True, shard=shard,
-                             dtype=dtype, method=method, leaf_rows=leaf_rows)
-    elif kind == "svd":
-        def dispatch(plan, data_batch):
-            return engine.svd(plan, data_batch, batched=True, shard=shard,
-                              dtype=dtype, method=method, leaf_rows=leaf_rows)
-    elif kind == "pca":
-        def dispatch(plan, data_batch):
-            return engine.pca(plan, data_batch, batched=True, shard=shard,
-                              k=k, dtype=dtype, method=method,
-                              leaf_rows=leaf_rows)
-    elif kind == "lsq":
-        if label_col is None:
-            raise ValueError("kind='lsq' needs label_col")
-
-        def dispatch(plan, data_batch):
-            return engine.least_squares(
-                plan, label_col, data_batch, batched=True, shard=shard,
-                ridge=ridge, dtype=dtype, method=method, leaf_rows=leaf_rows)
-    else:
-        raise ValueError(f"unknown serve kind {kind!r}")
-
+    common = dict(batched=True, shard=shard, dtype=dtype, method=method,
+                  leaf_rows=leaf_rows)
+    dispatch = {
+        "qr": lambda plan, batch: engine.qr(plan, batch, **common),
+        "svd": lambda plan, batch: engine.svd(plan, batch, **common),
+        "pca": lambda plan, batch: engine.pca(plan, batch, k=k, **common),
+        "lsq": lambda plan, batch: engine.least_squares(
+            plan, label_col, batch, ridge=ridge, **common),
+    }[kind]
     return FigaroServer(plan, dispatch)
 
 

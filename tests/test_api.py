@@ -1,0 +1,399 @@
+"""`repro.figaro` façade: Session/JoinDataset parity with the legacy entry
+points, plan-lifecycle (zero-retrace appends), engine LRU bounds, and the
+clear-error contracts."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import figaro
+from repro.core.engine import FigaroEngine, plan_for
+from repro.core.join_tree import JoinTree, build_plan
+from repro.core.qr import figaro_qr
+from repro.core.relation import Database
+from repro.core.svd import (least_squares_over_join, pca_over_join,
+                            svd_over_join)
+from repro.data.relational import cartesian, retailer_like, yelp_like
+
+TREES = {
+    "retailer": lambda: retailer_like(scale=60, cols=2),
+    "yelp": lambda: yelp_like(scale=40, cols=2),  # many-to-many
+    "cartesian": lambda: cartesian(7, 5, n1=2, n2=2),
+}
+
+
+def _star_tables(m_fact: int):
+    """Star schema with exactly 8 distinct fact keys for any m_fact >= 8, so
+    different fact sizes in one power-of-two bucket share a capacity spec."""
+    rng = np.random.default_rng(m_fact)
+    return {
+        "Orders": ({"cust": np.arange(m_fact) % 8,
+                    "prod": np.arange(m_fact) % 4},
+                   rng.normal(size=(m_fact, 2)), ["amount", "qty"]),
+        "Customers": ({"cust": np.arange(8)},
+                      rng.normal(size=(8, 2)), ["age", "income"]),
+        "Products": ({"prod": np.arange(4)},
+                     rng.normal(size=(4, 1)), ["price"]),
+    }
+
+
+_STAR_EDGES = [("Orders", "Customers"), ("Orders", "Products")]
+
+
+def _star_ds(session, m_fact=20):
+    return session.ingest(_star_tables(m_fact)).join("Orders", _STAR_EDGES)
+
+
+# -- golden parity: the façade is bit-identical to the legacy paths ----------
+
+
+@pytest.mark.parametrize("name", list(TREES))
+def test_qr_parity_bit_identical(name):
+    tree = TREES[name]()
+    ds = figaro.Session(bucket=False).from_tree(tree)
+    r_legacy = np.asarray(figaro_qr(build_plan(tree), dtype=jnp.float64))
+    np.testing.assert_array_equal(
+        np.asarray(ds.qr(dtype=jnp.float64)), r_legacy, err_msg=name)
+
+
+@pytest.mark.parametrize("name", list(TREES))
+def test_svd_pca_lsq_parity_bit_identical(name):
+    tree = TREES[name]()
+    plan = build_plan(tree)
+    ds = figaro.Session(bucket=False).from_tree(tree)
+
+    s, vt = ds.svd()
+    s_ref, vt_ref = svd_over_join(plan)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s_ref))
+    np.testing.assert_array_equal(np.asarray(vt), np.asarray(vt_ref))
+
+    pca = ds.pca(k=2)
+    pca_ref = pca_over_join(plan, k=2)
+    np.testing.assert_array_equal(np.asarray(pca.explained_variance),
+                                  np.asarray(pca_ref.explained_variance))
+    np.testing.assert_array_equal(np.asarray(pca.components),
+                                  np.asarray(pca_ref.components))
+    np.testing.assert_array_equal(np.asarray(pca.mean),
+                                  np.asarray(pca_ref.mean))
+
+    label = plan.num_cols - 1
+    beta, resid = ds.lsq(label, ridge=0.3)
+    beta_ref, resid_ref = least_squares_over_join(plan, label, ridge=0.3)
+    np.testing.assert_array_equal(np.asarray(beta), np.asarray(beta_ref))
+    np.testing.assert_array_equal(np.asarray(resid), np.asarray(resid_ref))
+
+
+def test_qr_parity_engine_path_and_bucketed():
+    """Direct engine dispatch == ds.qr, and the bucketed (capacity) session
+    agrees with the exact path to float64 round-off."""
+    tree = TREES["retailer"]()
+    plan = build_plan(tree)
+    engine = FigaroEngine(donate_data=False)
+    r_engine = np.asarray(engine.qr(plan, dtype=jnp.float64))
+    np.testing.assert_array_equal(
+        np.asarray(figaro.Session(bucket=False).from_tree(tree)
+                   .qr(dtype=jnp.float64)), r_engine)
+    r_cap = np.asarray(figaro.Session(bucket=True, headroom=8)
+                       .from_tree(tree).qr(dtype=jnp.float64))
+    np.testing.assert_allclose(r_cap, r_engine,
+                               atol=1e-10 * max(np.abs(r_engine).max(), 1.0))
+
+
+def test_batched_auto_detect_matches_per_sample():
+    """A leading batch axis flips to the batched dispatch; per-row results
+    match the per-sample dispatch bit for bit."""
+    sess = figaro.Session()
+    ds = _star_ds(sess)
+    rng = np.random.default_rng(1)
+    cap_shapes = [np.asarray(d).shape for d in ds.plan.data]
+    batch = tuple(np.stack([rng.normal(size=s) for _ in range(3)])
+                  for s in cap_shapes)
+    rb = np.asarray(ds.qr(batch, dtype=jnp.float64))
+    assert rb.shape == (3, ds.plan.num_cols, ds.plan.num_cols)
+    assert sess.engine.trace_count("qr_batched") == 1
+    for i in range(3):
+        ri = np.asarray(ds.qr([d[i] for d in batch], dtype=jnp.float64))
+        np.testing.assert_allclose(rb[i], ri,
+                                   atol=1e-10 * max(np.abs(ri).max(), 1.0))
+
+
+# -- bucketed sessions: near-miss shapes share one executable ----------------
+
+
+def test_bucket_true_shares_executable_across_near_miss_shapes():
+    sess = figaro.Session(bucket=True)
+    ds_a = _star_ds(sess, m_fact=20)  # fact rows bucket to 32
+    ds_b = _star_ds(sess, m_fact=24)  # near-miss: same bucket, same schema
+    ds_a.qr(dtype=jnp.float64)
+    assert sess.engine.trace_count("qr") == 1
+    ds_b.qr(dtype=jnp.float64)
+    assert sess.engine.trace_count("qr") == 1, \
+        "near-miss shapes in one bucket must share the executable"
+    assert ds_a.plan.spec == ds_b.plan.spec
+
+
+def test_bucket_false_distinct_shapes_compile_separately():
+    sess = figaro.Session(bucket=False)
+    _star_ds(sess, m_fact=20).qr(dtype=jnp.float64)
+    _star_ds(sess, m_fact=24).qr(dtype=jnp.float64)
+    assert sess.engine.trace_count("qr") == 2
+
+
+# -- plan lifecycle: lazy build, zero-retrace appends, stats -----------------
+
+
+def test_plan_is_lazy_and_append_before_compute_grows_tables():
+    ds = _star_ds(figaro.Session(headroom=8))
+    assert ds.stats()["plan_built"] is False
+    assert ds.append("Orders", {"cust": np.array([0, 1]),
+                                "prod": np.array([0, 1])},
+                     np.ones((2, 2)))
+    assert ds.stats()["plan_built"] is False  # still no plan
+    assert ds.stats()["nodes"]["Orders"]["live_rows"] == 22
+    r = ds.qr(dtype=jnp.float64)  # first compute builds the capacity plan
+    st = ds.stats()
+    assert st["plan_built"] and r.shape == (5, 5)
+    assert st["nodes"]["Orders"]["live_rows"] == 22
+    assert st["nodes"]["Orders"]["capacity_rows"] >= 22 + 8
+
+
+def test_append_within_capacity_is_zero_retrace():
+    sess = figaro.Session(headroom=16)
+    ds = _star_ds(sess)
+    ds.qr(dtype=jnp.float64)
+    traces = sess.engine.trace_count("qr")
+    in_cap = ds.append("Orders", {"cust": np.array([2, 3]),
+                                  "prod": np.array([2, 3])},
+                       np.ones((2, 2)) * 0.5)
+    assert in_cap is True
+    r = np.asarray(ds.qr(dtype=jnp.float64))
+    st = ds.stats()
+    assert st["traces"]["qr"] == traces, "append must not retrace"
+    assert st["appends"] == 1 and st["regrows"] == 0
+    # the appended rows are really in the answer
+    tree_now = ds.tree
+    r_ref = np.asarray(figaro_qr(build_plan(tree_now), dtype=jnp.float64))
+    np.testing.assert_allclose(r, r_ref,
+                               atol=1e-10 * max(np.abs(r_ref).max(), 1.0))
+
+
+def test_bucket_false_regrow_keeps_exact_capacities():
+    """A bucket=False dataset must keep capacities == live sizes across
+    regrows — refresh_plan's power-of-two regrowth must not leak in (it
+    would silently flip the dataset onto the bucketed masked path)."""
+    sess = figaro.Session(bucket=False)
+    ds = _star_ds(sess)
+    ds.qr(dtype=jnp.float64)
+    for step in range(2):  # every append overflows: one retrace each
+        assert ds.append("Orders", {"cust": np.array([0]),
+                                    "prod": np.array([0])},
+                         np.ones((1, 2))) is False
+        ds.qr(dtype=jnp.float64)
+        st = ds.stats()
+        orders = st["nodes"]["Orders"]
+        assert orders["capacity_rows"] == orders["live_rows"] == 21 + step
+        assert st["regrows"] == step + 1
+        assert st["traces"]["qr"] == 2 + step
+    tree_now = ds.tree
+    np.testing.assert_array_equal(
+        np.asarray(ds.qr(dtype=jnp.float64)),
+        np.asarray(figaro_qr(build_plan(tree_now), dtype=jnp.float64)))
+
+
+def test_append_past_capacity_regrows_once():
+    sess = figaro.Session(headroom=0)
+    ds = _star_ds(sess, m_fact=32)  # fact sits exactly on its bucket
+    ds.qr(dtype=jnp.float64)
+    traces = sess.engine.trace_count("qr")
+    in_cap = ds.append("Orders", {"cust": np.array([0]),
+                                  "prod": np.array([0])}, np.ones((1, 2)))
+    assert in_cap is False
+    ds.qr(dtype=jnp.float64)
+    st = ds.stats()
+    assert st["traces"]["qr"] == traces + 1  # exactly one regrow retrace
+    assert st["regrows"] == 1
+
+
+def test_live_sized_requests_padded_stale_rejected():
+    sess = figaro.Session(headroom=16)
+    ds = _star_ds(sess)
+    rng = np.random.default_rng(2)
+    live = tuple(rng.normal(size=(ds.tree.db[n].num_rows,
+                                  ds.tree.db[n].num_data_cols))
+                 for n in ds.tree.preorder())
+    r_live = np.asarray(ds.qr(live, dtype=jnp.float64))  # padded up inside
+    cap = tuple(np.zeros(np.asarray(d).shape) for d in ds.plan.data)
+    for c, l in zip(cap, live):
+        c[: l.shape[0]] = l
+    np.testing.assert_array_equal(r_live,
+                                  np.asarray(ds.qr(cap, dtype=jnp.float64)))
+    ds.append("Orders", {"cust": np.array([0]), "prod": np.array([0])},
+              np.ones((1, 2)))
+    with pytest.raises(ValueError, match="rebuild request buffers"):
+        ds.qr(live, dtype=jnp.float64)  # stale: built before the append
+    with pytest.raises(ValueError, match="one data leaf per relation"):
+        ds.qr(live[:-1], dtype=jnp.float64)  # missing a relation's leaf
+    with pytest.raises(ValueError, match="one data leaf per relation"):
+        ds.qr(live + (np.zeros((2, 2)),), dtype=jnp.float64)  # extra leaf
+
+
+# -- serving -----------------------------------------------------------------
+
+
+def test_dataset_serve_round_trip():
+    sess = figaro.Session()
+    ds = _star_ds(sess)
+    server = ds.serve(kind="lsq", label_col="price", ridge=0.2,
+                      dtype=jnp.float64)
+    rng = np.random.default_rng(3)
+    batch = tuple(np.stack([rng.normal(size=np.asarray(d).shape)
+                            for _ in range(2)]) for d in ds.plan.data)
+    betas, resids = server(batch)
+    assert np.asarray(betas).shape == (2, ds.plan.num_cols - 1)
+    assert np.asarray(resids).shape == (2,)
+    # served through the session engine's batched executable
+    assert sess.engine.trace_count("least_squares_batched") == 1
+
+
+def test_serve_kind_validated_eagerly_with_kinds_list():
+    from repro.train.serve import make_figaro_server
+
+    ds = _star_ds(figaro.Session())
+    with pytest.raises(ValueError, match=r"cholesky.*qr.*svd.*pca.*lsq"):
+        make_figaro_server(ds.plan, kind="cholesky")
+    with pytest.raises(ValueError, match="supported kinds"):
+        ds.serve(kind="nope")
+    with pytest.raises(ValueError, match="label_col"):
+        make_figaro_server(ds.plan, kind="lsq")
+
+
+# -- column naming -----------------------------------------------------------
+
+
+def test_lsq_by_column_name_matches_index():
+    ds = _star_ds(figaro.Session())
+    assert ds.columns == ("Orders.amount", "Orders.qty", "Customers.age",
+                          "Customers.income", "Products.price")
+    b_name, r_name = ds.lsq("price")
+    b_qual, r_qual = ds.lsq("Products.price")
+    b_idx, r_idx = ds.lsq(4)
+    np.testing.assert_array_equal(np.asarray(b_name), np.asarray(b_idx))
+    np.testing.assert_array_equal(np.asarray(b_qual), np.asarray(b_idx))
+    np.testing.assert_array_equal(np.asarray(r_name), np.asarray(r_idx))
+    del r_qual
+
+
+def test_column_index_errors():
+    ds = _star_ds(figaro.Session())
+    with pytest.raises(KeyError, match="unknown column"):
+        ds.column_index("nope")
+    with pytest.raises(IndexError):
+        ds.column_index(99)
+    amb = figaro.Session().ingest({
+        "A": ({"k": np.arange(3)}, np.ones((3, 1)), ["x"]),
+        "B": ({"k": np.arange(3)}, np.ones((3, 1)), ["x"]),
+    }).join("A", [("A", "B")])
+    with pytest.raises(KeyError, match="ambiguous"):
+        amb.column_index("x")
+    assert amb.column_index("B.x") == 1
+
+
+# -- engine LRU bounds ---------------------------------------------------------
+
+
+def test_engine_lru_eviction_bounds_cache():
+    engine = FigaroEngine(donate_data=False, max_cached=1)
+    plan_a = build_plan(cartesian(6, 5))
+    plan_b = build_plan(cartesian(9, 7))
+    engine.qr(plan_a, dtype=jnp.float64)
+    engine.qr(plan_b, dtype=jnp.float64)  # evicts A's executable
+    assert engine.trace_count("qr") == 2
+    assert engine.eviction_count("qr") == 1
+    assert engine.cache_size("qr") == 1
+    engine.qr(plan_b, dtype=jnp.float64)  # LRU hit, no recompile
+    assert engine.trace_count("qr") == 2
+    engine.qr(plan_a, dtype=jnp.float64)  # evicted: must recompile
+    assert engine.trace_count("qr") == 3
+    assert engine.eviction_count("qr") == 2
+
+
+def test_engine_lru_cap_two_keeps_both_alternating():
+    engine = FigaroEngine(donate_data=False, max_cached=2)
+    plan_a = build_plan(cartesian(6, 5))
+    plan_b = build_plan(cartesian(9, 7))
+    for _ in range(3):
+        engine.qr(plan_a, dtype=jnp.float64)
+        engine.qr(plan_b, dtype=jnp.float64)
+    assert engine.trace_count("qr") == 2
+    assert engine.eviction_count() == 0
+
+
+def test_engine_unbounded_by_default_and_validation():
+    engine = FigaroEngine(donate_data=False)
+    assert engine.max_cached is None
+    with pytest.raises(ValueError, match="max_cached"):
+        FigaroEngine(max_cached=0)
+    with pytest.raises(ValueError, match="max_cached"):
+        figaro.Session(engine=engine, max_cached=2)
+    with pytest.raises(ValueError, match="donate_data"):
+        figaro.Session(engine=engine, donate_data=True)
+    assert figaro.Session(max_cached=3).engine.max_cached == 3
+    assert figaro.Session(donate_data=True).engine.donate_data is True
+    assert figaro.Session().engine.donate_data is False
+
+
+# -- clear errors for wrong argument types -----------------------------------
+
+
+def test_plan_for_rejects_database_and_raw_tables():
+    db = Database.from_arrays(
+        {"S": ({}, np.ones((3, 2)), ["a", "b"])})
+    with pytest.raises(TypeError, match="tree_or_plan.*Database"):
+        plan_for(db)
+    with pytest.raises(TypeError, match="tree_or_plan.*dict"):
+        plan_for({"S": np.ones((3, 2))})
+    tree = JoinTree.from_edges(db, "S", [])
+    assert plan_for(tree).num_cols == 2  # JoinTree still accepted
+
+
+def test_engine_dispatch_rejects_non_plan():
+    engine = FigaroEngine(donate_data=False)
+    with pytest.raises(TypeError, match="'plan'.*dict"):
+        engine.qr({"S": np.ones((3, 2))})
+    db = Database.from_arrays({"S": ({}, np.ones((3, 2)), ["a", "b"])})
+    with pytest.raises(TypeError, match="'plan'.*Database"):
+        engine.svd(db)
+    with pytest.raises(TypeError, match="'plan'"):
+        from repro.train.serve import make_figaro_server
+
+        make_figaro_server(db, kind="qr")
+
+
+def test_ingest_and_from_tree_type_errors():
+    sess = figaro.Session()
+    with pytest.raises(TypeError, match="ingest"):
+        sess.ingest(np.ones((3, 2)))
+    with pytest.raises(TypeError, match="from_tree"):
+        sess.from_tree({"root": None})
+
+
+# -- legacy delegation surface -------------------------------------------------
+
+
+def test_legacy_entry_points_share_default_session_engine():
+    from repro.api import default_session
+    from repro.core.engine import default_engine
+
+    sess = default_session()
+    assert sess.engine is default_engine()
+    assert sess.bucket is False  # legacy behavior: no implicit bucketing
+    tree = cartesian(5, 4)
+    before = sess.engine.trace_count("qr")
+    figaro_qr(tree, dtype=jnp.float64)
+    figaro_qr(tree, dtype=jnp.float64)
+    assert sess.engine.trace_count("qr") == before + 1  # shared cache
+
+
+def test_figaro_alias_module():
+    assert figaro.Session is __import__("repro.api", fromlist=["Session"]).Session
+    assert figaro.FigaroEngine is FigaroEngine
