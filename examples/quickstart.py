@@ -13,7 +13,9 @@ The whole FiGaRo path goes through ONE surface — `repro.figaro`
      compiled dispatch (sharded over a device mesh when the Session has one);
   5. `ds.append(...)` — online data refresh with ZERO retraces (capacity is
      the compile signature, live size is data);
-  6. `ds.serve(kind=...)` — the standing batched serving endpoint.
+  6. `ds.serve(kind=...)` — the standing batched serving endpoint;
+  7. async serving: `server.submit(...)` -> futures, micro-batch coalescing,
+     and streaming `submit` + `server.append` off one shared plan state.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -127,3 +129,36 @@ server = ds.serve(kind="qr")  # also: svd / pca / lsq(label_col=...)
 r_served = server(tuple(np.stack([np.asarray(d)] * 2) for d in ds.plan.data))
 assert np.asarray(r_served).shape == (2, ds.plan.num_cols, ds.plan.num_cols)
 print("OK — ds.serve(): batched FigaroServer with online server.append().")
+
+# --- 7. async serving: submit -> futures -> streaming append -----------------
+# The server is async-first: `submit(request)` enqueues one request (per-node
+# [rows_i, n_i] leaves — or a [B, rows_i, n_i] sub-batch) and returns a
+# FigaroFuture immediately. Pending requests coalesce into ONE bucketed
+# micro-batch dispatch, and with queue_depth >= 2 the next batch's H2D
+# staging overlaps the in-flight executable (the blocking `server(batch)`
+# of step 6 is just `submit(batch).result()` over this same pipeline).
+compiles_b = ds.stats()["traces"].get("qr_batched", 0)
+requests = [tuple(np.asarray(d) * (1.0 + 0.1 * i) for d in ds.plan.data)
+            for i in range(6)]
+futures = [server.submit(r) for r in requests]          # returns immediately
+answers = [np.asarray(f.result()) for f in futures]     # submission order
+assert all(a.shape == (ds.plan.num_cols,) * 2 for a in answers)
+
+# Streaming append joins the same stream: it drains in-flight requests, then
+# refreshes the SHARED plan holder — ds.plan / ds.stats() and the server can
+# never fork, and in-capacity refreshes keep the executable (zero retraces).
+in_capacity = server.append("Reviews", ({"prod": rng.integers(0, n_prod, 3)},
+                                        rng.normal(size=(3, 1))))
+assert in_capacity and ds.plan is server.plan
+live = tuple(rng.normal(size=(ds.stats()["nodes"][nm]["live_rows"],
+                              ds.tree.db[nm].num_data_cols))
+             for nm in ds.tree.preorder())
+r_after = server.submit(live).result()  # live-sized request, padded inside
+assert np.asarray(r_after).shape == (ds.plan.num_cols, ds.plan.num_cols)
+st = ds.stats()
+assert st["traces"]["qr_batched"] - compiles_b <= 2  # B=2, B=1 buckets only
+print(f"async serving       : {len(requests)} futures answered, then "
+      f"append+submit with {st['traces']['qr_batched'] - compiles_b} "
+      f"batch-bucket compilations (streaming appends retrace nothing)")
+server.close()
+print("OK — async pipelined serving: submit -> futures -> streaming append.")

@@ -16,7 +16,9 @@ and exposes the fluent compute methods::
     beta, resid = ds.lsq("price", ridge=0.1)          # label by column name
     ds.append("Reviews", {"prod": keys}, rows)        # zero-retrace append
     ds.qr()                                           # launch-only
-    server = ds.serve(kind="qr")                      # batched FigaroServer
+    server = ds.serve(kind="qr")                      # async pipelined server
+    fut = server.submit(request)                      # -> FigaroFuture
+    r = fut.result()                                  # submission-order answer
 
 Everything underneath — `FigaroEngine` executable caching, plan-as-pytree
 jit, `plan_cache` bucketing/refreshes, `shard_map` serving — is the machinery
@@ -39,13 +41,20 @@ legacy entry point                                   Session / JoinDataset
 ``refresh_plan(plan, {n: (keys, rows)})``            ``ds.append(n, keys, rows)``
 ``engine.qr(plan, b, batched=True, shard=mesh)``     ``Session(mesh=mesh)`` ... ``ds.qr(b)``
 ``make_figaro_server(plan, kind=..., mesh=...)``     ``ds.serve(kind=...)``
+``server(batch)`` (blocking one-shot)                ``server.submit(...)`` -> `FigaroFuture`
 ``default_engine()``                                 ``default_session().engine``
 ===================================================  ==========================================
 
+(``server(batch)`` still works — it is now ``submit(batch).result()`` over
+the same async pipeline; prefer ``submit`` to let requests coalesce and
+overlap, and use ``server.append(...)`` / ``ds.append(...)``
+interchangeably — dataset and server share one plan holder.)
+
 The legacy entry points still work — they are thin delegations onto the
 module-level `default_session()` — but new code should start here: future
-capabilities (async serving, delta-aware counts, randomized sketching
-front-ends, TPU kernels) land as Session options and JoinDataset methods.
+capabilities (delta-aware counts, randomized sketching front-ends, TPU
+kernels) land as Session options and JoinDataset methods, the way async
+serving (`train.async_serve`) landed behind ``ds.serve()``.
 """
 
 from __future__ import annotations
@@ -57,11 +66,13 @@ import numpy as np
 
 from repro.core.engine import FigaroEngine, default_engine, plan_for
 from repro.core.join_tree import FigaroPlan, JoinTree, build_plan
-from repro.core.plan_cache import (_append_rows, build_capacity_plan,
-                                   pad_data, pad_plan, refresh_plan)
+from repro.core.plan_cache import (PlanHolder, _append_rows,
+                                   build_capacity_plan, pad_data, pad_plan)
 from repro.core.relation import Database, full_reduce
+from repro.train.async_serve import SERVE_KINDS, validate_serve_kind
 
-__all__ = ["Session", "TableSet", "JoinDataset", "default_session"]
+__all__ = ["Session", "TableSet", "JoinDataset", "default_session",
+           "SERVE_KINDS"]
 
 _UNSET = object()
 
@@ -76,9 +87,13 @@ _KIND_DTYPES = {
     "least_squares": jnp.float64,
 }
 
-# serve() kind -> engine pipeline kind (for dtype policy resolution).
-_SERVE_KINDS = {"qr": "qr", "svd": "svd", "pca": "pca",
-                "lsq": "least_squares"}
+# serve() kind -> engine pipeline kind (for dtype policy resolution). The
+# kind *list* itself is `SERVE_KINDS` (re-exported from
+# `repro.train.async_serve` — one source of truth, one eager validator,
+# shared with `make_figaro_server`).
+_SERVE_ENGINE_KINDS = {"qr": "qr", "svd": "svd", "pca": "pca",
+                       "lsq": "least_squares"}
+assert tuple(_SERVE_ENGINE_KINDS) == SERVE_KINDS
 
 
 class Session:
@@ -285,23 +300,30 @@ class Session:
 
     def serve(self, tree_or_plan, *, kind: str = "qr", label_col=None,
               k=None, ridge: float = 0.0, dtype=None, method=None,
-              leaf_rows=None, mesh=_UNSET, shard_axis=None):
-        """A batched `FigaroServer` for one join structure (see
-        `train.serve.make_figaro_server`); engine/mesh/dtype default to this
-        session's configuration."""
+              leaf_rows=None, mesh=_UNSET, shard_axis=None,
+              max_batch: int = 32, queue_depth: int = 2):
+        """An async pipelined serving endpoint for one join structure (see
+        `train.serve.make_figaro_server`): ``submit(request)`` returns a
+        `FigaroFuture`, pending requests coalesce up to ``max_batch`` rows,
+        and ``queue_depth`` batches pipeline through the engine (depth >= 2
+        overlaps the next batch's H2D staging with the in-flight dispatch).
+        Engine/mesh/dtype default to this session's configuration.
+        ``tree_or_plan`` may also be a `plan_cache.PlanHolder` to share plan
+        state (what `JoinDataset.serve` passes)."""
         from repro.train.serve import make_figaro_server
 
-        if kind not in _SERVE_KINDS:
-            raise ValueError(f"unknown serve kind {kind!r}; supported kinds: "
-                             f"{', '.join(sorted(_SERVE_KINDS))}")
+        validate_serve_kind(kind)
+        target = tree_or_plan if isinstance(tree_or_plan, PlanHolder) \
+            else plan_for(tree_or_plan)
         return make_figaro_server(
-            plan_for(tree_or_plan), kind=kind, label_col=label_col, k=k,
+            target, kind=kind, label_col=label_col, k=k,
             ridge=ridge, engine=self.engine,
-            dtype=self._dtype_for(_SERVE_KINDS[kind], dtype),
+            dtype=self._dtype_for(_SERVE_ENGINE_KINDS[kind], dtype),
             method=self.method if method is None else method,
             leaf_rows=self.leaf_rows if leaf_rows is None else leaf_rows,
             mesh=self.mesh if mesh is _UNSET else mesh,
-            shard_axis=self.shard_axis if shard_axis is None else shard_axis)
+            shard_axis=self.shard_axis if shard_axis is None else shard_axis,
+            max_batch=max_batch, queue_depth=queue_depth)
 
     def partitioned_qr(self, tree: JoinTree, num_parts: int, *, mesh=_UNSET,
                        dtype=None, method=None, use_kernel=None):
@@ -358,27 +380,33 @@ class JoinDataset:
 
     def __init__(self, session: Session, tree: JoinTree):
         self._session = session
-        self._tree = tree
-        self._plan: FigaroPlan | None = None
-        self._appends = 0
-        self._regrows = 0
+        self._tree = tree  # pre-plan only; once built, holder.plan owns it
+        # The holder is the ONE plan state for this join: servers spawned by
+        # `serve()` share it, so an append through either surface (dataset or
+        # server) is visible to both — no silent plan fork.
+        self._holder = PlanHolder(
+            on_regrow=None if session.bucket else self._exact_regrow)
 
     # -- plan lifecycle ------------------------------------------------------
 
     @property
     def tree(self) -> JoinTree:
-        return self._tree
+        plan = self._holder.plan
+        return plan.source_tree if plan is not None else self._tree
 
     @property
     def plan(self) -> FigaroPlan:
-        """The capacity plan (built lazily on first access)."""
-        if self._plan is None:
+        """The capacity plan (built lazily on first access; shared — through
+        a `plan_cache.PlanHolder` — with every server from `serve()`)."""
+        plan = self._holder.plan
+        if plan is None:
             if self._session.bucket:
-                self._plan = build_capacity_plan(
+                plan = build_capacity_plan(
                     self._tree, headroom=self._session.headroom)
             else:
-                self._plan = self._exact_capacity_plan(self._tree)
-        return self._plan
+                plan = self._exact_capacity_plan(self._tree)
+            self._holder.set(plan)
+        return plan
 
     def _exact_capacity_plan(self, tree: JoinTree) -> FigaroPlan:
         # Exact capacities: bit-identical numerics to the exact plan, but
@@ -389,6 +417,12 @@ class JoinDataset:
         plan.capacity_headroom = self._session.headroom
         return plan
 
+    def _exact_regrow(self, new_plan: FigaroPlan) -> FigaroPlan:
+        # Keep the session's bucket=False contract on regrow: refresh_plan
+        # grows into power-of-two buckets, but this dataset's capacities must
+        # stay exact (bit-identical path, one retrace per append).
+        return self._exact_capacity_plan(new_plan.source_tree)
+
     def append(self, node: str, keys, rows) -> bool:
         """Append rows to one relation; returns True when the refresh stayed
         within the plan's capacities (next dispatch is launch-only).
@@ -396,40 +430,33 @@ class JoinDataset:
         ``keys`` maps key-attribute name -> integer array, ``rows`` is a
         [rows, n_i] data matrix — the `plan_cache.refresh_plan` convention.
         Before the first compute the tables are simply grown (the capacity
-        plan has not been built yet, so there is nothing to refresh).
+        plan has not been built yet, so there is nothing to refresh). Once
+        servers exist, the refresh first drains their in-flight work, and
+        they serve the refreshed plan from the next dispatch on.
         """
-        self._appends += 1
-        if self._plan is None:
+        if self._holder.plan is None:
             rels = dict(self._tree.db.relations)
             if node not in rels:
                 raise KeyError(f"unknown relation {node!r}; "
                                f"have {sorted(rels)}")
             rels[node] = _append_rows(rels[node], keys, rows)
             self._tree = JoinTree(Database(rels), dict(self._tree.parent))
+            self._holder.appends += 1
             return True
-        new_plan = refresh_plan(self._plan, {node: (keys, rows)})
-        in_capacity = new_plan.spec == self._plan.spec
-        if not in_capacity:
-            self._regrows += 1
-            if not self._session.bucket:
-                # Keep the session's bucket=False contract on regrow:
-                # refresh_plan grows into power-of-two buckets, but this
-                # dataset's capacities must stay exact (bit-identical path,
-                # one retrace per append).
-                new_plan = self._exact_capacity_plan(new_plan.source_tree)
-        self._plan = new_plan
-        self._tree = new_plan.source_tree
-        return in_capacity
+        return self._holder.refresh({node: (keys, rows)})
 
     def stats(self) -> dict:
         """Lifecycle + compile counters: per-node capacity vs live rows,
         appends/regrows, and the session engine's per-kind trace counts,
         eviction counts, and cache size. A zero-retrace append shows up as
-        ``traces`` staying flat across dispatches."""
+        ``traces`` staying flat across dispatches. Appends made through a
+        live server (``server.append``) are counted here too — the dataset
+        and its servers share one plan holder."""
         engine = self._session.engine
+        plan = self._holder.plan
         nodes = {}
-        if self._plan is not None:
-            for sp, ix in zip(self._plan.spec.nodes, self._plan.index):
+        if plan is not None:
+            for sp, ix in zip(plan.spec.nodes, plan.index):
                 live = int(ix.row_mask.sum()) if ix.row_mask is not None \
                     else sp.m
                 nodes[sp.name] = {"capacity_rows": sp.m, "live_rows": live}
@@ -438,9 +465,9 @@ class JoinDataset:
                 nodes[name] = {"capacity_rows": None,
                                "live_rows": self._tree.db[name].num_rows}
         return {
-            "plan_built": self._plan is not None,
-            "appends": self._appends,
-            "regrows": self._regrows,
+            "plan_built": plan is not None,
+            "appends": self._holder.appends,
+            "regrows": self._holder.regrows,
             "nodes": nodes,
             "traces": self._session.engine.trace_counts(),
             "trace_count": engine.trace_count(),
@@ -537,16 +564,20 @@ class JoinDataset:
             ridge=ridge, **overrides)
 
     def serve(self, kind: str = "qr", *, label_col=None, **kw):
-        """A batched `FigaroServer` over this dataset's capacity plan.
+        """An async pipelined serving endpoint over this dataset's capacity
+        plan (`train.serve.make_figaro_server`): ``submit(request)`` returns
+        a `FigaroFuture`; ``server(batch)`` blocks for its answer.
 
-        The server holds its own reference to the plan: use
-        ``server.append(...)`` for online refreshes while serving (this
-        dataset's ``append`` does not reach into live servers).
+        The server shares this dataset's plan *holder*: ``server.append``
+        and ``ds.append`` refresh one plan state (draining the server's
+        in-flight work first), so ``ds.plan`` / ``ds.stats()`` and the
+        served plan can never fork.
         """
         if label_col is not None:
             label_col = self.column_index(label_col)
-        return self._session.serve(self.plan, kind=kind, label_col=label_col,
-                                   **kw)
+        _ = self.plan  # build the capacity plan before sharing the holder
+        return self._session.serve(self._holder, kind=kind,
+                                   label_col=label_col, **kw)
 
 
 _DEFAULT_SESSION: Session | None = None

@@ -49,7 +49,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
-import warnings
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +65,26 @@ from .plan_cache import bucket_spec, pad_data, pad_plan
 from .postprocess import postprocess_r0
 
 __all__ = ["FigaroEngine", "PCAResult", "default_engine", "plan_for"]
+
+
+def _repeat_pad(data, pad: int):
+    """Pad the leading request-batch axis by repeating the trailing request
+    — near-miss batch sizes then share an executable, and the pad rides
+    through a well-posed pipeline (an all-zero pad would push singular
+    systems through lsq/svd). The pad is sliced off the result."""
+    return tuple(jnp.concatenate([jnp.asarray(d)] + [jnp.asarray(d)[-1:]]
+                                 * pad) for d in data)
+
+
+@functools.lru_cache(maxsize=None)
+def _backend_supports_donation() -> bool:
+    """CPU's PJRT client ignores buffer donation and warns on every dispatch
+    that requests it. Requesting donation only where it works keeps serving
+    loops quiet without touching the process-global warnings filters (a
+    per-dispatch ``warnings.catch_warnings()`` save/restore is not
+    thread-safe once the async serving threads dispatch concurrently with
+    the caller's thread)."""
+    return jax.default_backend() != "cpu"
 
 
 def _bucketize(plan: FigaroPlan, data):
@@ -160,8 +180,13 @@ class FigaroEngine:
         # Executable cache, keyed on the FULL dispatch signature (kind, mesh,
         # plan treedef + leaf shapes/dtypes, static options) with one jit
         # wrapper per entry, so eviction can drop exactly one executable.
-        # Insertion/access order is the LRU order.
+        # Insertion/access order is the LRU order. The locks make cache
+        # bookkeeping and counter bumps safe under concurrent dispatch (the
+        # async serving path dispatches from a background thread while the
+        # owning session may keep dispatching from the caller's thread).
         self._jitted: collections.OrderedDict = collections.OrderedDict()
+        self._cache_lock = threading.RLock()
+        self._count_lock = threading.Lock()
 
     # -- cache plumbing ------------------------------------------------------
 
@@ -185,12 +210,14 @@ class FigaroEngine:
 
     def cache_size(self, kind: str | None = None) -> int:
         """Number of live cached executables (per kind, or total)."""
-        if kind is None:
-            return len(self._jitted)
-        return sum(1 for k in self._jitted if k[0] == kind)
+        with self._cache_lock:
+            if kind is None:
+                return len(self._jitted)
+            return sum(1 for k in self._jitted if k[0] == kind)
 
     def _bump(self, kind: str) -> None:
-        self._trace_counts[kind] += 1
+        with self._count_lock:
+            self._trace_counts[kind] += 1
 
     @staticmethod
     def _abstract(leaves) -> tuple:
@@ -223,7 +250,8 @@ class FigaroEngine:
             clear = getattr(fn, "clear_cache", None)
             if clear is not None:  # free the compiled program eagerly
                 clear()
-            self._evictions[kind] += 1
+            with self._count_lock:
+                self._evictions[kind] += 1
 
     @staticmethod
     def _normalize_shard(shard) -> tuple[Mesh | None, str | None]:
@@ -263,7 +291,8 @@ class FigaroEngine:
                        donate_argnums=(1,) if donate else ())
 
     def _dispatch(self, kind: str, plan: FigaroPlan, data, *, shard=None,
-                  bucket: bool = False, **options):
+                  bucket: bool = False, batch_capacity: int | None = None,
+                  **options):
         if not isinstance(plan, FigaroPlan):
             raise TypeError(_plan_arg_error("plan", plan))
         if bucket:
@@ -272,6 +301,9 @@ class FigaroEngine:
         if mesh is not None and not kind.endswith("_batched"):
             raise ValueError(
                 f"shard= requires a batched dispatch, got kind={kind!r}")
+        if batch_capacity is not None and not kind.endswith("_batched"):
+            raise ValueError(f"batch_capacity= requires a batched dispatch, "
+                             f"got kind={kind!r}")
         if data is None:
             if mesh is not None:
                 # plan.data is per-node [m_i, n_i] — there is no request-batch
@@ -285,8 +317,28 @@ class FigaroEngine:
             # them explicitly — donation would kill plan.data for later
             # dispatches on backends with real donation.
             plan_owned = {id(d) for d in plan.data}
-            donate = self.donate_data and not any(
-                id(d) in plan_owned for d in data)
+            donate = (self.donate_data and _backend_supports_donation()
+                      and not any(id(d) in plan_owned for d in data))
+        b_live = cap_pad = 0
+        if batch_capacity is not None and data:
+            # Partial-batch bucket selection: pad the request axis up to the
+            # chosen batch capacity (repeating the trailing request, as the
+            # mesh path does) so live batch sizes in one bucket share one
+            # executable; the pad is sliced off the result below. B=0 cannot
+            # repeat a trailing request — it dispatches at its own (cheap to
+            # compile) signature instead.
+            b_live = int(np.shape(data[0])[0])
+            cap_pad = batch_capacity - b_live
+            if b_live and cap_pad > 0:
+                data = _repeat_pad(data, cap_pad)
+                # padded buffers are fresh — never plan-owned
+                donate = self.donate_data and _backend_supports_donation()
+            elif cap_pad < 0:
+                raise ValueError(
+                    f"batch_capacity={batch_capacity} smaller than the live "
+                    f"request batch ({b_live})")
+            else:
+                cap_pad = 0
         b = pad = 0
         if mesh is not None:
             p = mesh.shape[axis]
@@ -299,36 +351,48 @@ class FigaroEngine:
                 return self._dispatch(kind, plan, data, **options)
             pad = -(-b // p) * p - b
             if pad:
-                # Bucket the batch to a multiple of the mesh axis by repeating
-                # the last request: near-miss batch sizes share an executable
-                # and the pad rides through a well-posed pipeline (an all-zero
-                # pad would push singular systems through lsq/svd).
-                data = tuple(jnp.concatenate(
-                    [jnp.asarray(d)] + [jnp.asarray(d)[-1:]] * pad)
-                    for d in data)
-                donate = self.donate_data  # padded buffers are fresh
+                # Bucket the batch to a multiple of the mesh axis.
+                data = _repeat_pad(data, pad)
+                # padded buffers are fresh — never plan-owned
+                donate = self.donate_data and _backend_supports_donation()
             data = jax.device_put(data, NamedSharding(mesh, P(axis)))
         key = self._signature(kind, plan, data, donate, mesh, axis, options)
-        fn = self._jitted.get(key)
-        if fn is None:
-            fn = self._jitted[key] = self._make_jitted(kind, donate, mesh,
-                                                       axis)
-            self._evict_lru(kind)
-        else:
-            self._jitted.move_to_end(key)  # LRU: most-recent at the tail
-        with warnings.catch_warnings():
-            # On backends without donation (CPU) jax warns per dispatch;
-            # semantics are unchanged, so keep serving loops quiet.
-            warnings.filterwarnings(
-                "ignore", message="Some donated buffers were not usable")
-            out = fn(plan.without_data(), data, **options)
+        with self._cache_lock:
+            fn = self._jitted.get(key)
+            if fn is None:
+                fn = self._jitted[key] = self._make_jitted(kind, donate, mesh,
+                                                           axis)
+                self._evict_lru(kind)
+            else:
+                self._jitted.move_to_end(key)  # LRU: most-recent at the tail
+        out = fn(plan.without_data(), data, **options)
         if pad:
             out = jax.tree.map(lambda x: x[:b], out)
+        if cap_pad:
+            out = jax.tree.map(lambda x: x[:b_live], out)
         return out
 
     @staticmethod
     def _canon(dtype) -> np.dtype:
         return np.dtype(dtype)
+
+    def stage(self, data, *, shard=None):
+        """Start the H2D transfer of request leaves ahead of their dispatch.
+
+        `jax.device_put` is asynchronous, so staging the *next* batch while
+        the current dispatch is still executing overlaps its host-to-device
+        copy with compute — with ``donate_data=True`` each staged slab is
+        consumed by the dispatch that answers it, so a pipeline of queue
+        depth 2 is exactly engine-level double buffering of donated inputs.
+        With a mesh ``shard``, leaves are placed with the dispatch's batch
+        sharding directly (the request axis should already be padded to a
+        multiple of the axis — `launch.mesh.serving_batch_capacity`).
+        """
+        mesh, axis = self._normalize_shard(shard)
+        if mesh is None:
+            return tuple(jax.device_put(jnp.asarray(d)) for d in data)
+        sharding = NamedSharding(mesh, P(axis))
+        return tuple(jax.device_put(jnp.asarray(d), sharding) for d in data)
 
     # -- traced pipeline bodies (run once per executable) --------------------
 
@@ -453,8 +517,8 @@ class FigaroEngine:
     # -- public API ----------------------------------------------------------
 
     def r0(self, plan: FigaroPlan, data=None, *, batched: bool = False,
-           shard=None, bucket: bool = False, dtype=jnp.float32,
-           use_kernel: bool = False) -> jnp.ndarray:
+           shard=None, bucket: bool = False, batch_capacity: int | None = None,
+           dtype=jnp.float32, use_kernel: bool = False) -> jnp.ndarray:
         """R₀ of Algorithm 2; ``batched`` expects [B, m_i, n_i] data leaves.
 
         ``shard`` (a `Mesh` or ``(mesh, axis)``; requires ``batched=True``)
@@ -466,34 +530,45 @@ class FigaroEngine:
         then carries extra all-zero rows at the capacity layout. Long-lived
         callers should hold a `plan_cache.build_capacity_plan` plan instead
         (same executables, no per-dispatch host padding).
+
+        ``batch_capacity`` (requires ``batched=True``) pads a partial request
+        batch up to the given bucket (repeating the trailing request; the pad
+        is sliced off the result), so the executable cache tracks batch
+        *buckets*, not every live batch size — the micro-batching serving
+        queue (`train.async_serve`) picks its buckets this way.
         """
         return self._dispatch("r0_batched" if batched else "r0", plan, data,
                               shard=shard, bucket=bucket,
+                              batch_capacity=batch_capacity,
                               dtype=self._canon(dtype),
                               use_kernel=use_kernel)
 
     def qr(self, plan: FigaroPlan, data=None, *, batched: bool = False,
-           shard=None, bucket: bool = False, dtype=jnp.float32,
-           method: str = "tsqr", leaf_rows: int = 256, panel: int = 32,
-           use_kernel: bool = False) -> jnp.ndarray:
+           shard=None, bucket: bool = False, batch_capacity: int | None = None,
+           dtype=jnp.float32, method: str = "tsqr", leaf_rows: int = 256,
+           panel: int = 32, use_kernel: bool = False) -> jnp.ndarray:
         """Upper-triangular R of the join's QR ([B, N, N] when batched)."""
         return self._dispatch(
             "qr_batched" if batched else "qr", plan, data, shard=shard,
-            bucket=bucket, dtype=self._canon(dtype), method=method,
+            bucket=bucket, batch_capacity=batch_capacity,
+            dtype=self._canon(dtype), method=method,
             leaf_rows=leaf_rows, panel=panel, use_kernel=use_kernel)
 
     def svd(self, plan: FigaroPlan, data=None, *, batched: bool = False,
-            shard=None, bucket: bool = False, dtype=jnp.float64,
+            shard=None, bucket: bool = False,
+            batch_capacity: int | None = None, dtype=jnp.float64,
             method: str = "tsqr", leaf_rows: int = 256, panel: int = 32,
             use_kernel: bool = False):
         """Singular values + right-singular vectors of the join matrix."""
         return self._dispatch(
             "svd_batched" if batched else "svd", plan, data, shard=shard,
-            bucket=bucket, dtype=self._canon(dtype), method=method,
+            bucket=bucket, batch_capacity=batch_capacity,
+            dtype=self._canon(dtype), method=method,
             leaf_rows=leaf_rows, panel=panel, use_kernel=use_kernel)
 
     def pca(self, plan: FigaroPlan, data=None, *, batched: bool = False,
-            shard=None, bucket: bool = False, k: int | None = None,
+            shard=None, bucket: bool = False,
+            batch_capacity: int | None = None, k: int | None = None,
             center: bool = True, dtype=jnp.float64, method: str = "tsqr",
             leaf_rows: int = 256, panel: int = 32,
             use_kernel: bool = False) -> PCAResult:
@@ -502,19 +577,22 @@ class FigaroEngine:
         k = n if k is None else min(k, n)
         return self._dispatch(
             "pca_batched" if batched else "pca", plan, data, shard=shard,
-            bucket=bucket, k=k, center=center, dtype=self._canon(dtype),
+            bucket=bucket, batch_capacity=batch_capacity, k=k, center=center,
+            dtype=self._canon(dtype),
             method=method, leaf_rows=leaf_rows, panel=panel,
             use_kernel=use_kernel)
 
     def least_squares(self, plan: FigaroPlan, label_col: int, data=None, *,
                       batched: bool = False, shard=None, bucket: bool = False,
+                      batch_capacity: int | None = None,
                       ridge: float = 0.0, dtype=jnp.float64,
                       method: str = "tsqr", leaf_rows: int = 256,
                       panel: int = 32, use_kernel: bool = False):
         """argmin_β ‖A[:, feats]·β − A[:, label]‖² over the unmaterialized join."""
         return self._dispatch(
             "least_squares_batched" if batched else "least_squares", plan,
-            data, shard=shard, bucket=bucket, label_col=label_col,
+            data, shard=shard, bucket=bucket, batch_capacity=batch_capacity,
+            label_col=label_col,
             ridge=float(ridge), dtype=self._canon(dtype), method=method,
             leaf_rows=leaf_rows, panel=panel, use_kernel=use_kernel)
 

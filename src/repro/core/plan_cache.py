@@ -46,7 +46,9 @@ new live sizes still fit (zero retraces), or grown buckets when they don't
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping
+import threading
+import weakref
+from typing import Callable, Mapping
 
 import numpy as np
 
@@ -61,6 +63,7 @@ __all__ = [
     "build_capacity_plan",
     "refresh_plan",
     "spec_fits",
+    "PlanHolder",
 ]
 
 
@@ -278,3 +281,77 @@ def refresh_plan(
     out.source_tree = new_tree
     out.capacity_headroom = headroom
     return out
+
+
+class PlanHolder:
+    """Thread-safe owner of ONE current capacity plan.
+
+    A `JoinDataset` and every server spawned from it (``ds.serve(...)``)
+    share a single holder, so an append through *either* surface is visible
+    to both — there is exactly one plan state per join, never a silent fork
+    where ``server.append(...)`` leaves ``ds.plan`` / ``ds.stats()`` stale
+    (or vice versa).
+
+    ``refresh(rows_per_node)`` is the one mutation path: it first **drains**
+    every attached server (in-flight and queued requests were validated and
+    padded against the old capacities, so they must be answered before the
+    plan can change), then applies `refresh_plan` under the holder's lock.
+    The ``appends`` / ``regrows`` counters live here for the same reason the
+    plan does — any surface that can append must see the same counts.
+
+    ``on_regrow`` is an optional policy hook applied when a refresh
+    overflows the current capacities: it receives the (bucket-regrown)
+    refreshed plan and returns the plan to install — `repro.api` uses it to
+    keep ``bucket=False`` datasets on exact capacities across regrows.
+    """
+
+    def __init__(self, plan: FigaroPlan | None = None, *,
+                 on_regrow: Callable[[FigaroPlan], FigaroPlan] | None = None):
+        self._plan = plan
+        self._on_regrow = on_regrow
+        self._lock = threading.RLock()
+        self._servers: weakref.WeakSet = weakref.WeakSet()
+        self.appends = 0
+        self.regrows = 0
+
+    @property
+    def plan(self) -> FigaroPlan | None:
+        with self._lock:
+            return self._plan
+
+    def set(self, plan: FigaroPlan) -> None:
+        """Install a plan (the lazy first build); use `refresh` for appends."""
+        with self._lock:
+            self._plan = plan
+
+    def attach(self, server) -> None:
+        """Register a server (anything with ``flush()``) to drain before
+        plan swaps. Held weakly — dropping the server detaches it."""
+        self._servers.add(server)
+
+    def drain(self) -> None:
+        """Block until every attached server has answered its queue."""
+        for server in list(self._servers):
+            server.flush()
+
+    def refresh(self, new_rows_per_node) -> bool:
+        """Drain attached servers, then append rows via `refresh_plan`.
+
+        Returns True when the refresh stayed within the plan's capacities
+        (same signature — the next dispatch is launch-only) and False when
+        the capacities grew (one recompile on the next dispatch).
+        """
+        self.drain()
+        with self._lock:
+            if self._plan is None:
+                raise ValueError("PlanHolder has no plan yet — build one "
+                                 "before refreshing")
+            new_plan = refresh_plan(self._plan, new_rows_per_node)
+            in_capacity = new_plan.spec == self._plan.spec
+            self.appends += 1
+            if not in_capacity:
+                self.regrows += 1
+                if self._on_regrow is not None:
+                    new_plan = self._on_regrow(new_plan)
+            self._plan = new_plan
+        return in_capacity

@@ -12,6 +12,10 @@ façade ultimately dispatches.
 from repro.api import (JoinDataset, Session, TableSet,  # noqa: F401
                        default_session)
 from repro.core.engine import FigaroEngine, PCAResult  # noqa: F401
+from repro.core.plan_cache import PlanHolder  # noqa: F401
+from repro.train.async_serve import (AsyncFigaroServer,  # noqa: F401
+                                     FigaroFuture, SERVE_KINDS)
 
 __all__ = ["Session", "TableSet", "JoinDataset", "default_session",
-           "FigaroEngine", "PCAResult"]
+           "FigaroEngine", "PCAResult", "PlanHolder", "AsyncFigaroServer",
+           "FigaroFuture", "SERVE_KINDS"]

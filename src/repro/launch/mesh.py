@@ -14,8 +14,10 @@ import jax
 from jax.sharding import Mesh
 
 from repro.compat import AxisType, make_mesh
+from repro.core.plan_cache import next_pow2
 
-__all__ = ["make_production_mesh", "make_host_mesh", "make_data_mesh"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_data_mesh",
+           "serving_batch_capacity"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -43,3 +45,21 @@ def make_data_mesh(num_devices: int | None = None) -> Mesh:
         raise ValueError(f"num_devices={n} outside [1, {len(devs)}]")
     return make_mesh((n,), ("data",), axis_types=(AxisType.Auto,),
                      devices=devs[:n])
+
+
+def serving_batch_capacity(b: int, *, axis_size: int = 1) -> int:
+    """Bucketed request-batch capacity for a live batch of ``b`` requests.
+
+    The async serving queue (`train.async_serve`) dispatches coalesced
+    micro-batches at these capacities — the next power of two, rounded up to
+    a multiple of the serving mesh's ``data`` axis — so the executable cache
+    keys on a handful of batch *buckets* instead of every live batch size,
+    and a sharded dispatch never re-pads inside the engine. B=0 has no
+    trailing request to repeat; it keeps its own (empty) signature.
+    """
+    if b <= 0:
+        return 0
+    cap = next_pow2(b)
+    if axis_size > 1:
+        cap = -(-cap // axis_size) * axis_size
+    return cap

@@ -11,127 +11,91 @@ combine collectives).
 structure (a `FigaroPlan`), many concurrent users' feature-sets — each dispatch
 vmaps Algorithm 2 + post-processing over a leading batch axis through a
 `FigaroEngine` with donated request buffers, so serving cost per request is
-one cached executable launch.
+one cached executable launch. The server is async-first
+(`repro.train.async_serve`): ``submit(request)`` returns a `FigaroFuture`,
+pending requests coalesce into bucketed micro-batches, and queue depth >= 2
+overlaps the next batch's H2D staging with the in-flight dispatch; the
+synchronous `FigaroServer` call is a ``submit(...).result()`` wrapper.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.engine import FigaroEngine
 from repro.core.join_tree import FigaroPlan
-from repro.core.plan_cache import pad_data, refresh_plan
+from repro.core.plan_cache import PlanHolder
 from repro.models import transformer as tf
 from repro.models.config import ModelConfig
 from repro.sharding.rules import data_axes
+from repro.train.async_serve import (AsyncFigaroServer, FigaroFuture,
+                                     SERVE_KINDS, validate_serve_kind)
 
 __all__ = ["make_prefill", "make_decode_step", "cache_specs", "sample_loop",
-           "make_figaro_server", "FigaroServer", "SERVE_KINDS"]
-
-#: Supported `make_figaro_server` kinds (validated eagerly at construction).
-SERVE_KINDS = ("qr", "svd", "pca", "lsq")
+           "make_figaro_server", "FigaroServer", "AsyncFigaroServer",
+           "FigaroFuture", "SERVE_KINDS", "validate_serve_kind"]
 
 
-class FigaroServer:
-    """Callable serving endpoint for one join structure, with an online
-    append path when the plan is a capacity plan.
+class FigaroServer(AsyncFigaroServer):
+    """The synchronous face of `AsyncFigaroServer` — behavior-preserving for
+    pre-async callers.
 
-    ``server(data_batch)`` answers B requests per dispatch (see
-    `make_figaro_server`). ``server.append(node, rows)`` appends rows to one
-    relation (``rows = (key_columns, data_rows)`` as in
-    `plan_cache.refresh_plan`) and swaps in the refreshed plan: as long as
+    ``server(data_batch)`` is exactly ``server.submit(data_batch).result()``:
+    the request rides the same micro-batching queue and pipelined dispatch,
+    the call just blocks for its own answer. ``server.append(node, rows)``
+    (``rows = (key_columns, data_rows)`` as in `plan_cache.refresh_plan`)
+    drains in-flight work and refreshes the shared plan holder: as long as
     the new live sizes fit the plan's bucketed capacities, the next dispatch
     reuses the cached executable — zero retraces under streaming appends.
 
     Capacity contract for requests: batch leaves are [B, rows_i, n_i] in the
     plan's (sorted) row order with ``rows_i`` either the node's live size or
-    its full capacity; live-sized leaves are zero-padded up to capacity here
+    its full capacity; live-sized leaves are zero-padded up to capacity
     (the dead rows are masked out inside the pipeline regardless).
     """
 
-    def __init__(self, plan: FigaroPlan, dispatch):
-        self._plan = plan
-        self._dispatch = dispatch
 
-    @property
-    def plan(self) -> FigaroPlan:
-        """The currently-served plan (replaced by `append`)."""
-        return self._plan
-
-    def __call__(self, data_batch):
-        if any(ix.row_mask is not None for ix in self._plan.index):
-            data_batch = self._pad_requests(data_batch)
-        return self._dispatch(self._plan, data_batch)
-
-    def _pad_requests(self, data_batch):
-        """Zero-pad live-sized request leaves up to capacity.
-
-        Exactly live-sized or exactly capacity-sized leaves are accepted;
-        anything else raises — silently zero-filling a stale-sized batch
-        (e.g. one built for the live sizes *before* an `append`) would treat
-        the missing rows as all-zero features and corrupt the answer. Leaves
-        already at capacity pass through untouched (no host round trip on
-        the hot serving path).
-        """
-        data_batch = tuple(data_batch)
-        sizes = [(int(ix.row_mask.sum()) if ix.row_mask is not None else sp.m,
-                  sp) for sp, ix in zip(self._plan.spec.nodes,
-                                        self._plan.index)]
-        if all(d.shape[-2] == sp.m for d, (_, sp) in zip(data_batch, sizes)):
-            return data_batch  # already capacity-shaped
-        for d, (live, sp) in zip(data_batch, sizes):
-            if d.shape[-2] not in (live, sp.m):
-                raise ValueError(
-                    f"{sp.name}: request batch has {d.shape[-2]} rows; "
-                    f"expected the live size ({live}) or the capacity "
-                    f"({sp.m}) — rebuild request buffers after append()")
-        return pad_data(data_batch, self._plan.spec)
-
-    def append(self, node: str, rows) -> bool:
-        """Append ``rows = (key_columns, data_rows)`` to relation ``node``.
-
-        Returns True when the refresh stayed within the plan's capacities
-        (same signature — the next dispatch is launch-only) and False when
-        the capacities grew (one recompile on the next dispatch).
-        """
-        new_plan = refresh_plan(self._plan, {node: rows})
-        same_signature = new_plan.spec == self._plan.spec
-        self._plan = new_plan
-        return same_signature
-
-
-def make_figaro_server(plan: FigaroPlan, *, kind: str = "qr",
+def make_figaro_server(plan: FigaroPlan | PlanHolder, *, kind: str = "qr",
                        label_col: int | None = None, k: int | None = None,
                        ridge: float = 0.0,
                        dtype=jnp.float32, method: str = "tsqr",
                        leaf_rows: int = 256,
                        engine: FigaroEngine | None = None,
-                       mesh: Mesh | None = None, shard_axis: str = "data"):
+                       mesh: Mesh | None = None, shard_axis: str = "data",
+                       max_batch: int = 32,
+                       queue_depth: int = 2) -> FigaroServer:
     """Batched FiGaRo serving endpoint for one join structure.
 
-    Returns a `FigaroServer` — ``server(data_batch)`` takes per-node
-    [B, m_i, n_i] request buffers and answers B requests per dispatch:
+    Returns a `FigaroServer` (an `AsyncFigaroServer` whose ``__call__``
+    blocks) — ``server.submit(request)`` enqueues per-node [m_i, n_i]
+    request leaves (or a [B, m_i, n_i] sub-batch) and returns a
+    `FigaroFuture`; ``server(data_batch)`` answers synchronously:
 
       kind="qr"   -> R      [B, N, N]
       kind="svd"  -> (s [B, N], Vt [B, N, N])
       kind="pca"  -> PCAResult with a leading batch axis (top-``k``)
       kind="lsq"  -> (betas [B, N-1], residuals [B]) against ``label_col``
 
-    Every kind — lsq and pca included — answers the whole batch with ONE
-    cached executable launch (the engine's genuinely-batched vmapped bodies).
+    Pending requests are coalesced up to ``max_batch`` rows and the batch is
+    padded to its bucketed capacity (powers of two, aligned to the mesh
+    axis), so every kind — lsq and pca included — answers the whole
+    coalesced batch with ONE cached executable launch, and the executable
+    cache tracks batch *buckets*, not every live batch size. ``queue_depth``
+    coalesced batches may be in flight at once: at depth >= 2 the next
+    batch's staging (async H2D of donated input slabs) overlaps the
+    in-flight dispatch — engine-level double buffering.
     With a ``mesh``, the request-batch axis is additionally sharded over
     ``mesh[shard_axis]`` via `shard_map`: one executable per (plan signature,
-    mesh signature) serves the global batch across all devices, with the
-    batch padded/bucketed to the axis size inside the engine.
+    mesh signature) serves the global batch across all devices.
 
     With a capacity plan (`plan_cache.build_capacity_plan`) the server also
     exposes ``server.append(node, rows)`` for online data refreshes; appends
-    that keep the bucketed signature never retrace.
+    that keep the bucketed signature never retrace. Pass a
+    `plan_cache.PlanHolder` to share plan state with other surfaces (this is
+    what ``JoinDataset.serve`` does — dataset and server then see one plan,
+    never a fork).
 
     The engine donates request buffers (they are consumed by the dispatch that
     answers them) and compiles once per plan signature — subsequent batches,
@@ -143,28 +107,37 @@ def make_figaro_server(plan: FigaroPlan, *, kind: str = "qr",
     """
     # Validate up front — a bad kind must fail at construction with the full
     # list of supported kinds, not at (or after) the first dispatch.
-    if kind not in SERVE_KINDS:
-        raise ValueError(f"unknown serve kind {kind!r}; supported kinds: "
-                         f"{', '.join(SERVE_KINDS)}")
-    if kind == "lsq" and label_col is None:
-        raise ValueError("kind='lsq' needs label_col")
-    if not isinstance(plan, FigaroPlan):
-        from repro.core.engine import _plan_arg_error
+    validate_serve_kind(kind, label_col=label_col, check_label=True)
+    if isinstance(plan, PlanHolder):
+        holder = plan
+    else:
+        if not isinstance(plan, FigaroPlan):
+            from repro.core.engine import _plan_arg_error
 
-        raise TypeError(_plan_arg_error("plan", plan))
+            raise TypeError(_plan_arg_error("plan", plan))
+        holder = PlanHolder(plan)
     engine = engine if engine is not None else FigaroEngine(donate_data=True)
     shard = None if mesh is None else (mesh, shard_axis)
 
     common = dict(batched=True, shard=shard, dtype=dtype, method=method,
                   leaf_rows=leaf_rows)
     dispatch = {
-        "qr": lambda plan, batch: engine.qr(plan, batch, **common),
-        "svd": lambda plan, batch: engine.svd(plan, batch, **common),
-        "pca": lambda plan, batch: engine.pca(plan, batch, k=k, **common),
-        "lsq": lambda plan, batch: engine.least_squares(
-            plan, label_col, batch, ridge=ridge, **common),
+        "qr": lambda plan, batch, cap: engine.qr(
+            plan, batch, batch_capacity=cap, **common),
+        "svd": lambda plan, batch, cap: engine.svd(
+            plan, batch, batch_capacity=cap, **common),
+        "pca": lambda plan, batch, cap: engine.pca(
+            plan, batch, batch_capacity=cap, k=k, **common),
+        "lsq": lambda plan, batch, cap: engine.least_squares(
+            plan, label_col, batch, batch_capacity=cap, ridge=ridge,
+            **common),
     }[kind]
-    return FigaroServer(plan, dispatch)
+    server = FigaroServer(holder, dispatch, engine=engine,
+                          axis_size=1 if mesh is None
+                          else int(mesh.shape[shard_axis]),
+                          max_batch=max_batch, queue_depth=queue_depth)
+    holder.attach(server)
+    return server
 
 
 def make_prefill(cfg: ModelConfig, max_len: int):

@@ -265,6 +265,34 @@ def test_serve_kind_validated_eagerly_with_kinds_list():
         ds.serve(kind="nope")
     with pytest.raises(ValueError, match="label_col"):
         make_figaro_server(ds.plan, kind="lsq")
+    # one source of truth for the kind list, exported on the façade
+    assert figaro.SERVE_KINDS == ("qr", "svd", "pca", "lsq")
+
+
+def test_serve_submit_future_and_no_plan_fork():
+    """ds.serve() is async-first (submit -> FigaroFuture) and shares the
+    dataset's plan holder: server.append updates ds.plan/ds.stats() and
+    vice versa — regression for the pre-async silent plan-state fork."""
+    sess = figaro.Session(headroom=16)
+    ds = _star_ds(sess)
+    server = ds.serve(kind="qr", dtype=jnp.float64)
+    fut = server.submit(tuple(np.asarray(d) for d in ds.plan.data))
+    assert np.asarray(fut.result(timeout=60)).shape \
+        == (ds.plan.num_cols, ds.plan.num_cols)
+
+    live0 = ds.stats()["nodes"]["Orders"]["live_rows"]
+    assert server.append("Orders", ({"cust": np.array([0]),
+                                     "prod": np.array([0])},
+                                    np.ones((1, 2))))
+    st = ds.stats()
+    assert st["nodes"]["Orders"]["live_rows"] == live0 + 1, \
+        "server.append left the dataset's stats stale"
+    assert st["appends"] == 1
+    assert ds.plan is server.plan
+    assert ds.append("Orders", {"cust": np.array([1]),
+                                "prod": np.array([1])}, np.ones((1, 2)))
+    assert server.plan is ds.plan, "ds.append left the server's plan stale"
+    server.close()
 
 
 # -- column naming -----------------------------------------------------------
