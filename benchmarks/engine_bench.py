@@ -39,7 +39,7 @@ import numpy as np
 
 from repro.core.counts import compute_counts
 from repro.core.engine import FigaroEngine
-from repro.core.figaro import figaro_r0
+from repro.core.figaro import assembly_traffic, figaro_r0
 from repro.core.heads_tails import segmented_head_tail
 from repro.core.join_tree import build_plan
 from repro.data.relational import favorita_like, yelp_like
@@ -142,6 +142,26 @@ def run(csv: Csv, *, fast: bool = False) -> None:
         add(name, "assembly_scatter_free_s", t_free)
         add(name, "assembly_speedup", t_scatter / t_free)
 
+        # Bytes-moved model next to the wall-clock: padded assembly re-copies
+        # every slab at full R₀ width, band assembly writes each slab at its
+        # own width into a zeroed buffer (`figaro.assembly_traffic`).
+        bytes_padded = assembly_traffic(plan.spec, assembly="padded")
+        bytes_band = assembly_traffic(plan.spec, assembly="band")
+        band_fn = jax.jit(lambda p, d: figaro_r0(p, list(d),
+                                                 dtype=jnp.float64,
+                                                 assembly="band"))
+        # Band relocates the same slab values, but the two jitted programs
+        # fuse differently, so agreement is ulp-level, not bitwise.
+        np.testing.assert_allclose(
+            np.asarray(free_fn(stripped, data)),
+            np.asarray(band_fn(stripped, data)), rtol=1e-12, atol=1e-12)
+        t_band = timeit(lambda: band_fn(stripped, data))
+        add(name, "assembly_padded_bytes", bytes_padded)
+        add(name, "assembly_band_bytes", bytes_band)
+        add(name, "assembly_band_bytes_ratio", bytes_band / bytes_padded)
+        add(name, "assembly_band_s", t_band)
+        add(name, "assembly_band_vs_padded_speedup", t_free / t_band)
+
         # -- per-sample loop vs batched dispatch ----------------------------
         engine = FigaroEngine(donate_data=False)
         b = 4 if fast else 16
@@ -220,6 +240,36 @@ def run(csv: Csv, *, fast: bool = False) -> None:
         add(case, "mesh_s", t_shard)
         add(case, "speedup", t_batch / t_shard)
         add(case, "traces_qr_batched_total", engine.trace_count("qr_batched"))
+
+        # -- kernel path: fused node kernel × assembly variant --------------
+        # All four (use_kernel × assembly) corners through the same engine.
+        # On CPU the fused kernel runs interpret=True (emulation — expect it
+        # to LOSE here; the comparison that transfers to TPU is the bytes
+        # model above and the parity columns). Zero extra retraces: repeat
+        # dispatches of every corner stay launch-only.
+        kp_engine = FigaroEngine(donate_data=False)
+        case = f"{name}:kernel_path"
+        r_base = None
+        for use_kernel in (False, True):
+            for asm in ("padded", "band"):
+                fn = lambda: kp_engine.qr(plan, dtype=jnp.float64,
+                                          use_kernel=use_kernel, assembly=asm)
+                t_corner = timeit(fn)
+                tag = f"{'fused' if use_kernel else 'xla'}_{asm}"
+                add(case, f"qr_{tag}_s", t_corner)
+                r = fn()
+                if r_base is None:
+                    r_base = r
+                else:
+                    add(case, f"qr_{tag}_max_abs_err",
+                        float(jnp.abs(r - r_base).max()))
+        traces_now = kp_engine.trace_count("qr")
+        for use_kernel in (False, True):  # repeat every corner: launch-only
+            for asm in ("padded", "band"):
+                block(kp_engine.qr(plan, dtype=jnp.float64,
+                                   use_kernel=use_kernel, assembly=asm))
+        add(case, "retraces_on_repeat",
+            kp_engine.trace_count("qr") - traces_now)
 
         # -- append-only refresh: capacity plan vs rebuild-and-recompile ----
         # Serving cost of a data append. Capacity path: host re-ingest + pad

@@ -15,7 +15,10 @@ The whole FiGaRo path goes through ONE surface — `repro.figaro`
      the compile signature, live size is data);
   6. `ds.serve(kind=...)` — the standing batched serving endpoint;
   7. async serving: `server.submit(...)` -> futures, micro-batch coalescing,
-     and streaming `submit` + `server.append` off one shared plan state.
+     and streaming `submit` + `server.append` off one shared plan state;
+  8. accelerator knobs: `Session(use_kernel=, assembly=)` — the fused
+     per-node Pallas kernel and band-wise R0 assembly, numerics-preserving
+     and cached per static signature.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -162,3 +165,30 @@ print(f"async serving       : {len(requests)} futures answered, then "
       f"batch-bucket compilations (streaming appends retrace nothing)")
 server.close()
 print("OK — async pipelined serving: submit -> futures -> streaming append.")
+
+# --- 8. accelerator knobs: fused node kernel + band-wise R0 assembly --------
+# Two per-dispatch (or per-Session) flags, both numerics-preserving:
+#
+#   use_kernel=True  routes each join-tree node through the fused
+#       `kernels.node_fused` Pallas kernel — live-row masking, segmented
+#       head/tail extraction, phi-weight scaling and slab emission in ONE
+#       HBM round-trip per node instead of three-plus. On TPU/GPU it runs
+#       compiled; on CPU it executes interpret=True (correct but slow — keep
+#       the default XLA path for CPU serving).
+#   assembly="band"  materializes R0 band-by-band from (col0, width) slab
+#       metadata on the plan instead of padding every slab to full width —
+#       assembly traffic drops from O(rows * N) to O(sum rows_i * width_i)
+#       (`figaro.assembly_traffic` is the analytic model; BENCH_engine.json
+#       tracks both wall-clock and bytes).
+#
+# Both flags ride the STATIC half of the dispatch signature: each (use_kernel,
+# assembly) corner compiles once and repeats are launch-only, so flipping a
+# corner never invalidates the others' cached executables.
+r_band = ds.qr(assembly="band")  # same data as ds.qr(), band-assembled R0
+assert np.abs(np.asarray(r_band) - np.asarray(ds.qr())).max() < 1e-10
+from repro.core.figaro import assembly_traffic
+bytes_padded = assembly_traffic(ds.plan.spec, assembly="padded")
+bytes_band = assembly_traffic(ds.plan.spec, assembly="band")
+print(f"band assembly       : {bytes_band / bytes_padded:.2f}x the padded "
+      f"assembly bytes ({bytes_padded} -> {bytes_band})")
+print("OK — Session(use_kernel=, assembly=) select the accelerated paths.")

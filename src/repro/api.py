@@ -124,8 +124,13 @@ class Session:
                  every append regrows the plan (one retrace each).
     headroom:    extra row capacity per node reserved at plan build, so a
                  known append rate cannot immediately overflow a bucket.
-    method, leaf_rows, panel, use_kernel:
-                 post-processing defaults forwarded to every dispatch.
+    method, leaf_rows, panel, use_kernel, assembly:
+                 pipeline defaults forwarded to every dispatch:
+                 ``use_kernel=True`` routes each join-tree node through the
+                 fused Pallas pass (`repro.kernels.node_fused`; compiled on
+                 TPU/GPU, interpreted on CPU), ``assembly`` ("padded" |
+                 "band") picks the R₀ materialization (`repro.core.figaro`).
+                 Both are static options — part of the executable cache key.
     donate_data, max_cached:
                  forwarded to the engine constructor; combining either with
                  ``engine=`` raises (configure the engine directly instead).
@@ -159,7 +164,8 @@ class Session:
                  shard_axis: str = "data", dtype=None, bucket: bool = True,
                  headroom: int = 0, method: str = "tsqr",
                  leaf_rows: int = 256, panel: int = 32,
-                 use_kernel: bool = False, donate_data: bool | None = None,
+                 use_kernel: bool = False, assembly: str = "padded",
+                 donate_data: bool | None = None,
                  max_cached: int | None = None):
         if engine is not None and (max_cached is not None
                                    or donate_data is not None):
@@ -176,6 +182,7 @@ class Session:
         self.leaf_rows = leaf_rows
         self.panel = panel
         self.use_kernel = use_kernel
+        self.assembly = assembly
 
     # -- dataset construction ------------------------------------------------
 
@@ -211,13 +218,14 @@ class Session:
         return _KIND_DTYPES[kind]
 
     def _post_opts(self, kind: str, dtype, method, leaf_rows, panel,
-                   use_kernel) -> dict:
+                   use_kernel, assembly) -> dict:
         return dict(
             dtype=self._dtype_for(kind, dtype),
             method=self.method if method is None else method,
             leaf_rows=self.leaf_rows if leaf_rows is None else leaf_rows,
             panel=self.panel if panel is None else panel,
-            use_kernel=self.use_kernel if use_kernel is None else use_kernel)
+            use_kernel=self.use_kernel if use_kernel is None else use_kernel,
+            assembly=self.assembly if assembly is None else assembly)
 
     @staticmethod
     def _is_batched(data, batched) -> bool:
@@ -245,32 +253,33 @@ class Session:
     # -- plan-level compute (the legacy delegation surface) ------------------
 
     def r0(self, tree_or_plan, data=None, *, batched=None, shard=_UNSET,
-           bucket=None, dtype=None, use_kernel=None):
+           bucket=None, dtype=None, use_kernel=None, assembly=None):
         """R₀ of Algorithm 2 under this session's configuration."""
         return self.engine.r0(
             plan_for(tree_or_plan), data,
             dtype=self._dtype_for("r0", dtype),
             use_kernel=self.use_kernel if use_kernel is None else use_kernel,
+            assembly=self.assembly if assembly is None else assembly,
             **self._dispatch_opts(data, batched, shard, bucket))
 
     def qr(self, tree_or_plan, data=None, *, batched=None, shard=_UNSET,
            bucket=None, dtype=None, method=None, leaf_rows=None, panel=None,
-           use_kernel=None):
+           use_kernel=None, assembly=None):
         """Upper-triangular R of the join's QR ([B, N, N] when batched)."""
         return self.engine.qr(
             plan_for(tree_or_plan), data,
             **self._post_opts("qr", dtype, method, leaf_rows, panel,
-                              use_kernel),
+                              use_kernel, assembly),
             **self._dispatch_opts(data, batched, shard, bucket))
 
     def svd(self, tree_or_plan, data=None, *, k: int | None = None,
             batched=None, shard=_UNSET, bucket=None, dtype=None, method=None,
-            leaf_rows=None, panel=None, use_kernel=None):
+            leaf_rows=None, panel=None, use_kernel=None, assembly=None):
         """Singular values + right-singular vectors; ``k`` keeps the top-k."""
         s, vt = self.engine.svd(
             plan_for(tree_or_plan), data,
             **self._post_opts("svd", dtype, method, leaf_rows, panel,
-                              use_kernel),
+                              use_kernel, assembly),
             **self._dispatch_opts(data, batched, shard, bucket))
         if k is not None:
             s, vt = s[..., :k], vt[..., :k, :]
@@ -279,29 +288,29 @@ class Session:
     def pca(self, tree_or_plan, data=None, *, k: int | None = None,
             center: bool = True, batched=None, shard=_UNSET, bucket=None,
             dtype=None, method=None, leaf_rows=None, panel=None,
-            use_kernel=None):
+            use_kernel=None, assembly=None):
         """PCA of the join matrix from R (+ factorized means)."""
         return self.engine.pca(
             plan_for(tree_or_plan), data, k=k, center=center,
             **self._post_opts("pca", dtype, method, leaf_rows, panel,
-                              use_kernel),
+                              use_kernel, assembly),
             **self._dispatch_opts(data, batched, shard, bucket))
 
     def least_squares(self, tree_or_plan, label_col: int, data=None, *,
                       ridge: float = 0.0, batched=None, shard=_UNSET,
                       bucket=None, dtype=None, method=None, leaf_rows=None,
-                      panel=None, use_kernel=None):
+                      panel=None, use_kernel=None, assembly=None):
         """argmin_β ‖A[:, feats]·β − A[:, label]‖² over the join."""
         return self.engine.least_squares(
             plan_for(tree_or_plan), label_col, data, ridge=ridge,
             **self._post_opts("least_squares", dtype, method, leaf_rows,
-                              panel, use_kernel),
+                              panel, use_kernel, assembly),
             **self._dispatch_opts(data, batched, shard, bucket))
 
     def serve(self, tree_or_plan, *, kind: str = "qr", label_col=None,
               k=None, ridge: float = 0.0, dtype=None, method=None,
-              leaf_rows=None, mesh=_UNSET, shard_axis=None,
-              max_batch: int = 32, queue_depth: int = 2):
+              leaf_rows=None, use_kernel=None, assembly=None, mesh=_UNSET,
+              shard_axis=None, max_batch: int = 32, queue_depth: int = 2):
         """An async pipelined serving endpoint for one join structure (see
         `train.serve.make_figaro_server`): ``submit(request)`` returns a
         `FigaroFuture`, pending requests coalesce up to ``max_batch`` rows,
@@ -321,12 +330,15 @@ class Session:
             dtype=self._dtype_for(_SERVE_ENGINE_KINDS[kind], dtype),
             method=self.method if method is None else method,
             leaf_rows=self.leaf_rows if leaf_rows is None else leaf_rows,
+            use_kernel=self.use_kernel if use_kernel is None else use_kernel,
+            assembly=self.assembly if assembly is None else assembly,
             mesh=self.mesh if mesh is _UNSET else mesh,
             shard_axis=self.shard_axis if shard_axis is None else shard_axis,
             max_batch=max_batch, queue_depth=queue_depth)
 
     def partitioned_qr(self, tree: JoinTree, num_parts: int, *, mesh=_UNSET,
-                       dtype=None, method=None, use_kernel=None):
+                       dtype=None, method=None, use_kernel=None,
+                       assembly=None):
         """Fact-partitioned multi-device QR (`distributed` layer) through
         this session's engine/mesh."""
         from repro.core.distributed import partitioned_figaro_qr
@@ -337,7 +349,8 @@ class Session:
             dtype=(dtype if dtype is not None else
                    self.dtype if self.dtype is not None else jnp.float64),
             method=self.method if method is None else method,
-            use_kernel=self.use_kernel if use_kernel is None else use_kernel)
+            use_kernel=self.use_kernel if use_kernel is None else use_kernel,
+            assembly=self.assembly if assembly is None else assembly)
 
 
 @dataclasses.dataclass

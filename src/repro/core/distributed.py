@@ -191,6 +191,7 @@ def partitioned_figaro_qr(
     dtype=jnp.float64,
     method: str = "tsqr",
     use_kernel: bool = False,
+    assembly: str = "padded",
     engine=None,
     mesh: Mesh | None = None,
     axis: str = "data",
@@ -220,7 +221,8 @@ def partitioned_figaro_qr(
     parts = partition_fact_table(tree, num_parts)
     if mesh is None:
         rs = [engine.qr(build_plan(t), dtype=dtype, method=method,
-                        use_kernel=use_kernel) for t in parts]
+                        use_kernel=use_kernel, assembly=assembly)
+              for t in parts]
         stacked = jnp.concatenate(rs, axis=0)
         return normalize_sign(tsqr_r(stacked, leaf_rows=max(
             r.shape[0] for r in rs)))
@@ -229,7 +231,7 @@ def partitioned_figaro_qr(
     for i, t in enumerate(parts):
         with jax.default_device(slots[i % slots.size]):
             rs.append(engine.qr(build_plan(t), dtype=dtype, method=method,
-                                use_kernel=use_kernel))
+                                use_kernel=use_kernel, assembly=assembly))
     # Colocate the per-slot Rs before stacking (cross-device concat is an
     # error), then THIN-combine the [P·N, N] stack over the mesh.
     stacked = jnp.concatenate(

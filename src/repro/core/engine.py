@@ -152,20 +152,25 @@ class FigaroEngine:
     """
 
     _STATIC = {
-        "r0": ("dtype", "use_kernel"),
-        "r0_batched": ("dtype", "use_kernel"),
-        "qr": ("dtype", "method", "leaf_rows", "panel", "use_kernel"),
-        "qr_batched": ("dtype", "method", "leaf_rows", "panel", "use_kernel"),
-        "svd": ("dtype", "method", "leaf_rows", "panel", "use_kernel"),
-        "svd_batched": ("dtype", "method", "leaf_rows", "panel", "use_kernel"),
+        "r0": ("dtype", "use_kernel", "assembly"),
+        "r0_batched": ("dtype", "use_kernel", "assembly"),
+        "qr": ("dtype", "method", "leaf_rows", "panel", "use_kernel",
+               "assembly"),
+        "qr_batched": ("dtype", "method", "leaf_rows", "panel", "use_kernel",
+                       "assembly"),
+        "svd": ("dtype", "method", "leaf_rows", "panel", "use_kernel",
+                "assembly"),
+        "svd_batched": ("dtype", "method", "leaf_rows", "panel", "use_kernel",
+                        "assembly"),
         "pca": ("dtype", "k", "center", "method", "leaf_rows", "panel",
-                "use_kernel"),
+                "use_kernel", "assembly"),
         "pca_batched": ("dtype", "k", "center", "method", "leaf_rows",
-                        "panel", "use_kernel"),
+                        "panel", "use_kernel", "assembly"),
         "least_squares": ("dtype", "label_col", "ridge", "method",
-                          "leaf_rows", "panel", "use_kernel"),
+                          "leaf_rows", "panel", "use_kernel", "assembly"),
         "least_squares_batched": ("dtype", "label_col", "ridge", "method",
-                                  "leaf_rows", "panel", "use_kernel"),
+                                  "leaf_rows", "panel", "use_kernel",
+                                  "assembly"),
     }
 
     def __init__(self, *, donate_data: bool = True,
@@ -274,9 +279,13 @@ class FigaroEngine:
                 # leading request-batch axis of every data leaf is split over
                 # ``mesh[axis]``; every output leaf has a leading batch axis.
                 body = lambda p, d: impl(p, d, **options)
+                # check_rep=False: pallas_call (the fused node kernel) has no
+                # replication rule, and nothing here relies on the check —
+                # the plan is replicated in, all outputs are P(axis)-sharded.
                 mapped = shard_map(body, mesh=mesh,
                                    in_specs=(P(), P(axis)),
-                                   out_specs=P(axis))
+                                   out_specs=P(axis),
+                                   check_rep=False)
                 return mapped(plan, data)
 
         # wraps() keeps impl's signature visible so static_argnames resolve,
@@ -396,56 +405,59 @@ class FigaroEngine:
 
     # -- traced pipeline bodies (run once per executable) --------------------
 
-    def _r0_impl(self, plan, data, *, dtype, use_kernel):
-        return figaro_r0(plan, list(data), dtype=dtype, use_kernel=use_kernel)
+    def _r0_impl(self, plan, data, *, dtype, use_kernel, assembly):
+        return figaro_r0(plan, list(data), dtype=dtype, use_kernel=use_kernel,
+                         assembly=assembly)
 
-    def _r0_batched_impl(self, plan, data, *, dtype, use_kernel):
+    def _r0_batched_impl(self, plan, data, *, dtype, use_kernel, assembly):
         return jax.vmap(lambda d: figaro_r0(
-            plan, list(d), dtype=dtype, use_kernel=use_kernel))(data)
+            plan, list(d), dtype=dtype, use_kernel=use_kernel,
+            assembly=assembly))(data)
 
     def _qr_one(self, plan, data, *, dtype, method, leaf_rows, panel,
-                use_kernel):
-        r0 = figaro_r0(plan, list(data), dtype=dtype, use_kernel=use_kernel)
+                use_kernel, assembly):
+        r0 = figaro_r0(plan, list(data), dtype=dtype, use_kernel=use_kernel,
+                       assembly=assembly)
         return postprocess_r0(r0, method=method, leaf_rows=leaf_rows,
                               panel=panel, use_kernel=use_kernel)
 
     def _qr_impl(self, plan, data, *, dtype, method, leaf_rows, panel,
-                 use_kernel):
+                 use_kernel, assembly):
         return self._qr_one(plan, data, dtype=dtype, method=method,
                             leaf_rows=leaf_rows, panel=panel,
-                            use_kernel=use_kernel)
+                            use_kernel=use_kernel, assembly=assembly)
 
     def _qr_batched_impl(self, plan, data, *, dtype, method, leaf_rows, panel,
-                         use_kernel):
+                         use_kernel, assembly):
         return jax.vmap(lambda d: self._qr_one(
             plan, d, dtype=dtype, method=method, leaf_rows=leaf_rows,
-            panel=panel, use_kernel=use_kernel))(data)
+            panel=panel, use_kernel=use_kernel, assembly=assembly))(data)
 
     def _svd_one(self, plan, data, *, dtype, method, leaf_rows, panel,
-                 use_kernel):
+                 use_kernel, assembly):
         r = self._qr_one(plan, data, dtype=dtype, method=method,
                          leaf_rows=leaf_rows, panel=panel,
-                         use_kernel=use_kernel)
+                         use_kernel=use_kernel, assembly=assembly)
         _, s, vt = jnp.linalg.svd(r)
         return s, vt
 
     def _svd_impl(self, plan, data, *, dtype, method, leaf_rows, panel,
-                  use_kernel):
+                  use_kernel, assembly):
         return self._svd_one(plan, data, dtype=dtype, method=method,
                              leaf_rows=leaf_rows, panel=panel,
-                             use_kernel=use_kernel)
+                             use_kernel=use_kernel, assembly=assembly)
 
     def _svd_batched_impl(self, plan, data, *, dtype, method, leaf_rows,
-                          panel, use_kernel):
+                          panel, use_kernel, assembly):
         return jax.vmap(lambda d: self._svd_one(
             plan, d, dtype=dtype, method=method, leaf_rows=leaf_rows,
-            panel=panel, use_kernel=use_kernel))(data)
+            panel=panel, use_kernel=use_kernel, assembly=assembly))(data)
 
     def _pca_one(self, plan, data, *, k, center, dtype, method, leaf_rows,
-                 panel, use_kernel):
+                 panel, use_kernel, assembly):
         r = self._qr_one(plan, data, dtype=dtype, method=method,
                          leaf_rows=leaf_rows, panel=panel,
-                         use_kernel=use_kernel)
+                         use_kernel=use_kernel, assembly=assembly)
         sums, total = _column_moments(plan, data, dtype)
         mean = sums / total
         gram = r.T @ r
@@ -463,22 +475,23 @@ class FigaroEngine:
                          mean=mean, num_rows=total)
 
     def _pca_impl(self, plan, data, *, k, center, dtype, method, leaf_rows,
-                  panel, use_kernel):
+                  panel, use_kernel, assembly):
         return self._pca_one(plan, data, k=k, center=center, dtype=dtype,
                              method=method, leaf_rows=leaf_rows, panel=panel,
-                             use_kernel=use_kernel)
+                             use_kernel=use_kernel, assembly=assembly)
 
     def _pca_batched_impl(self, plan, data, *, k, center, dtype, method,
-                          leaf_rows, panel, use_kernel):
+                          leaf_rows, panel, use_kernel, assembly):
         return jax.vmap(lambda d: self._pca_one(
             plan, d, k=k, center=center, dtype=dtype, method=method,
-            leaf_rows=leaf_rows, panel=panel, use_kernel=use_kernel))(data)
+            leaf_rows=leaf_rows, panel=panel, use_kernel=use_kernel,
+            assembly=assembly))(data)
 
     def _least_squares_one(self, plan, data, *, label_col, ridge, dtype,
-                           method, leaf_rows, panel, use_kernel):
+                           method, leaf_rows, panel, use_kernel, assembly):
         r = self._qr_one(plan, data, dtype=dtype, method=method,
                          leaf_rows=leaf_rows, panel=panel,
-                         use_kernel=use_kernel)
+                         use_kernel=use_kernel, assembly=assembly)
         n = plan.spec.num_cols
         feat = jnp.array([j for j in range(n) if j != label_col])
         # Permute label last, re-triangularize the permuted R (cheap: N×N).
@@ -500,25 +513,26 @@ class FigaroEngine:
         return beta, resid
 
     def _least_squares_impl(self, plan, data, *, label_col, ridge, dtype,
-                            method, leaf_rows, panel, use_kernel):
+                            method, leaf_rows, panel, use_kernel, assembly):
         return self._least_squares_one(
             plan, data, label_col=label_col, ridge=ridge, dtype=dtype,
             method=method, leaf_rows=leaf_rows, panel=panel,
-            use_kernel=use_kernel)
+            use_kernel=use_kernel, assembly=assembly)
 
     def _least_squares_batched_impl(self, plan, data, *, label_col, ridge,
                                     dtype, method, leaf_rows, panel,
-                                    use_kernel):
+                                    use_kernel, assembly):
         return jax.vmap(lambda d: self._least_squares_one(
             plan, d, label_col=label_col, ridge=ridge, dtype=dtype,
             method=method, leaf_rows=leaf_rows, panel=panel,
-            use_kernel=use_kernel))(data)
+            use_kernel=use_kernel, assembly=assembly))(data)
 
     # -- public API ----------------------------------------------------------
 
     def r0(self, plan: FigaroPlan, data=None, *, batched: bool = False,
            shard=None, bucket: bool = False, batch_capacity: int | None = None,
-           dtype=jnp.float32, use_kernel: bool = False) -> jnp.ndarray:
+           dtype=jnp.float32, use_kernel: bool = False,
+           assembly: str = "padded") -> jnp.ndarray:
         """R₀ of Algorithm 2; ``batched`` expects [B, m_i, n_i] data leaves.
 
         ``shard`` (a `Mesh` or ``(mesh, axis)``; requires ``batched=True``)
@@ -536,42 +550,51 @@ class FigaroEngine:
         is sliced off the result), so the executable cache tracks batch
         *buckets*, not every live batch size — the micro-batching serving
         queue (`train.async_serve`) picks its buckets this way.
+
+        ``use_kernel`` routes each node through the fused Pallas pass
+        (`kernels/node_fused`); ``assembly`` ("padded" | "band") picks the R₀
+        materialization (see `core.figaro`). Both are static options — part
+        of the executable cache key.
         """
         return self._dispatch("r0_batched" if batched else "r0", plan, data,
                               shard=shard, bucket=bucket,
                               batch_capacity=batch_capacity,
                               dtype=self._canon(dtype),
-                              use_kernel=use_kernel)
+                              use_kernel=use_kernel, assembly=assembly)
 
     def qr(self, plan: FigaroPlan, data=None, *, batched: bool = False,
            shard=None, bucket: bool = False, batch_capacity: int | None = None,
            dtype=jnp.float32, method: str = "tsqr", leaf_rows: int = 256,
-           panel: int = 32, use_kernel: bool = False) -> jnp.ndarray:
+           panel: int = 32, use_kernel: bool = False,
+           assembly: str = "padded") -> jnp.ndarray:
         """Upper-triangular R of the join's QR ([B, N, N] when batched)."""
         return self._dispatch(
             "qr_batched" if batched else "qr", plan, data, shard=shard,
             bucket=bucket, batch_capacity=batch_capacity,
             dtype=self._canon(dtype), method=method,
-            leaf_rows=leaf_rows, panel=panel, use_kernel=use_kernel)
+            leaf_rows=leaf_rows, panel=panel, use_kernel=use_kernel,
+            assembly=assembly)
 
     def svd(self, plan: FigaroPlan, data=None, *, batched: bool = False,
             shard=None, bucket: bool = False,
             batch_capacity: int | None = None, dtype=jnp.float64,
             method: str = "tsqr", leaf_rows: int = 256, panel: int = 32,
-            use_kernel: bool = False):
+            use_kernel: bool = False, assembly: str = "padded"):
         """Singular values + right-singular vectors of the join matrix."""
         return self._dispatch(
             "svd_batched" if batched else "svd", plan, data, shard=shard,
             bucket=bucket, batch_capacity=batch_capacity,
             dtype=self._canon(dtype), method=method,
-            leaf_rows=leaf_rows, panel=panel, use_kernel=use_kernel)
+            leaf_rows=leaf_rows, panel=panel, use_kernel=use_kernel,
+            assembly=assembly)
 
     def pca(self, plan: FigaroPlan, data=None, *, batched: bool = False,
             shard=None, bucket: bool = False,
             batch_capacity: int | None = None, k: int | None = None,
             center: bool = True, dtype=jnp.float64, method: str = "tsqr",
             leaf_rows: int = 256, panel: int = 32,
-            use_kernel: bool = False) -> PCAResult:
+            use_kernel: bool = False,
+            assembly: str = "padded") -> PCAResult:
         """PCA of the join matrix from R (+ factorized means when centering)."""
         n = plan.spec.num_cols
         k = n if k is None else min(k, n)
@@ -580,21 +603,23 @@ class FigaroEngine:
             bucket=bucket, batch_capacity=batch_capacity, k=k, center=center,
             dtype=self._canon(dtype),
             method=method, leaf_rows=leaf_rows, panel=panel,
-            use_kernel=use_kernel)
+            use_kernel=use_kernel, assembly=assembly)
 
     def least_squares(self, plan: FigaroPlan, label_col: int, data=None, *,
                       batched: bool = False, shard=None, bucket: bool = False,
                       batch_capacity: int | None = None,
                       ridge: float = 0.0, dtype=jnp.float64,
                       method: str = "tsqr", leaf_rows: int = 256,
-                      panel: int = 32, use_kernel: bool = False):
+                      panel: int = 32, use_kernel: bool = False,
+                      assembly: str = "padded"):
         """argmin_β ‖A[:, feats]·β − A[:, label]‖² over the unmaterialized join."""
         return self._dispatch(
             "least_squares_batched" if batched else "least_squares", plan,
             data, shard=shard, bucket=bucket, batch_capacity=batch_capacity,
             label_col=label_col,
             ridge=float(ridge), dtype=self._canon(dtype), method=method,
-            leaf_rows=leaf_rows, panel=panel, use_kernel=use_kernel)
+            leaf_rows=leaf_rows, panel=panel, use_kernel=use_kernel,
+            assembly=assembly)
 
 
 def _plan_arg_error(arg_name: str, value) -> str:

@@ -24,18 +24,32 @@ argument**. One compiled executable serves every plan with the same signature;
 `repro.core.engine.FigaroEngine` owns that cache and the batched (vmapped)
 dispatch over a leading data axis.
 
-R₀ assembly is scatter-free: the (row, col) layout of every emitted block is
-precomputed in `join_tree.build_plan` (``tail_row0``/``out_row0``), so R₀ is
-the concatenation of column-padded row slabs in emission order — no
-``zeros().at[].set`` scatters on the hot path, and the carried `Data` matrix of
-an inner node is likewise a pure concatenation (its child blocks are
-column-contiguous by the preorder layout).
+Two hot-path variants, both cache-keyed by the engine:
+
+  * ``use_kernel=True`` routes each node's two head/tail passes through the
+    fused `kernels/node_fused` Pallas kernel: live-row masking, the weighted
+    segmented scan, the tail formula, segment-start zeroing and √Φ emission
+    scaling collapse into one HBM round-trip per pass, and the heads come
+    from an O(m) gather of the kernel's inclusive sums instead of a second
+    [m, n] reduction. ``use_kernel=False`` (default) is the XLA path —
+    `segmented_head_tail` per pass — which stays the CPU fallback.
+
+  * ``assembly`` picks how the emitted slabs become R₀. ``"padded"``
+    (default) pads every slab to the full ``num_cols`` width and concatenates
+    in emission order — every slab is written twice at full width. ``"band"``
+    uses the band layout recorded in ``PlanSpec.bands``: each slab is
+    slice-updated into a zeros [r0_rows, num_cols] buffer at its static
+    (row0, col0) band, so beyond the single zero fill each slab moves only
+    its own rowsᵢ·widthᵢ elements (`assembly_traffic` is the analytic model
+    the benchmarks report). Both paths produce bit-identical layouts.
 
 Capacity-padded plans (`repro.core.plan_cache`): when a node carries a
 ``row_mask``, the static shapes above are *capacities* and the mask is the
 weight vector of every row-level Givens sequence — dead rows contribute
 nothing (weight 0, data zeroed) and the corresponding R₀ rows are exactly
-zero, so the same executable serves every live size up to capacity.
+zero, so the same executable serves every live size up to capacity. The fused
+kernel keeps this contract: the mask rides in as the kernel's ``data_scale``
+so masked slab rows are exactly zero straight out of the kernel.
 """
 
 from __future__ import annotations
@@ -48,14 +62,70 @@ import jax.numpy as jnp
 
 from .counts import compute_counts
 from .heads_tails import segmented_head_tail
-from .join_tree import FigaroPlan
+from .join_tree import FigaroPlan, PlanSpec
 
-__all__ = ["figaro_r0", "figaro_r0_batched", "figaro_r0_fn"]
+__all__ = ["figaro_r0", "figaro_r0_batched", "figaro_r0_fn",
+           "assembly_traffic"]
+
+ASSEMBLIES = ("padded", "band")
 
 
 def _pad_cols(block: jnp.ndarray, col0: int, num_cols: int) -> jnp.ndarray:
     """Embed ``block`` into columns [col0, col0+w) of an all-zero [rows, N] slab."""
     return jnp.pad(block, ((0, 0), (col0, num_cols - col0 - block.shape[1])))
+
+
+def _assemble_padded(spec: PlanSpec, tail_slabs, out_slabs) -> jnp.ndarray:
+    """Every slab padded to full width, concatenated in emission order."""
+    slabs = []
+    for idx in reversed(spec.preorder):
+        sp = spec.nodes[idx]
+        slabs.append(_pad_cols(tail_slabs[idx], sp.col_start, spec.num_cols))
+        slabs.append(_pad_cols(out_slabs[idx], sp.subtree_start, spec.num_cols))
+    return jnp.concatenate(slabs, axis=0)
+
+
+def _assemble_band(spec: PlanSpec, tail_slabs, out_slabs) -> jnp.ndarray:
+    """Band-wise R₀ assembly (bit-identical layout to the padded path).
+
+    Every slab's destination is a *static* contiguous band recorded in
+    ``PlanSpec.bands`` — rows [row0, row0+rows) × columns [col0, col0+width)
+    of R₀, zero outside — so the slabs are slice-updated straight into one
+    [r0_rows, num_cols] zeros buffer. Static-offset `dynamic_update_slice` is
+    a contiguous block write XLA performs in place on the dead operand (NOT a
+    row-index scatter, which the emission layout was designed to avoid), so
+    the assembly writes each slab once at its own width: r0_rows·num_cols for
+    the zero fill plus Σ rowsᵢ·widthᵢ for the bands, instead of the padded
+    path's full-width copy of every slab followed by the full-width concat.
+    """
+    dtype = out_slabs[spec.root].dtype
+    r0 = jnp.zeros((spec.r0_rows, spec.num_cols), dtype)
+    for b in spec.bands:
+        slab = tail_slabs[b.node] if b.kind == "tail" else out_slabs[b.node]
+        r0 = jax.lax.dynamic_update_slice(r0, slab, (b.row0, b.col0))
+    return r0
+
+
+def assembly_traffic(spec: PlanSpec, *, assembly: str = "padded",
+                     itemsize: int = 8) -> int:
+    """Analytic bytes *written* by R₀ assembly.
+
+    ``"padded"`` writes a full-width copy of every slab narrower than
+    ``num_cols`` (the pad) plus the final [r0_rows, num_cols] concat;
+    ``"band"`` writes the zero fill once plus each slab at its own band
+    width. This is the attribution model `benchmarks/engine_bench.py` reports
+    next to wall-clock, so a band-vs-padded win is explainable in bytes, not
+    just observed in seconds.
+    """
+    full = spec.r0_rows * spec.num_cols
+    if assembly == "padded":
+        pad_writes = sum(b.rows * spec.num_cols for b in spec.bands
+                         if b.width != spec.num_cols)
+        return (pad_writes + full) * itemsize
+    if assembly == "band":
+        band_writes = sum(b.rows * b.width for b in spec.bands)
+        return (full + band_writes) * itemsize
+    raise ValueError(f"unknown assembly {assembly!r}; expected {ASSEMBLIES}")
 
 
 def figaro_r0(
@@ -64,31 +134,39 @@ def figaro_r0(
     *,
     dtype=jnp.float32,
     use_kernel: bool = False,
+    assembly: str = "padded",
 ) -> jnp.ndarray:
     """Run Algorithm 2; returns R₀ with static shape [plan.r0_rows, plan.num_cols].
 
     ``data[i]`` overrides node i's data matrix (same row order as the plan) —
     used for jit arguments and for propagating gradients through FiGaRo.
+    ``use_kernel`` routes the per-node passes through the fused Pallas kernel;
+    ``assembly`` ("padded" | "band") picks the R₀ materialization (see module
+    docstring) — the layouts are identical, only the traffic differs.
     """
+    if assembly not in ASSEMBLIES:
+        raise ValueError(f"unknown assembly {assembly!r}; expected {ASSEMBLIES}")
+    if use_kernel:
+        from repro.kernels.node_fused import ops as nf_ops
     spec = plan.spec
     if data is None:
         data = plan.data
     data = [jnp.asarray(d, dtype=dtype) for d in data]
     counts = compute_counts(plan, dtype=dtype)
 
-    # Carried state per node (filled children-first).
+    # Carried state per node (filled children-first); emitted slabs by node.
     carried_data: dict[int, jnp.ndarray] = {}
     carried_scales: dict[int, jnp.ndarray] = {}
-    slabs: list[jnp.ndarray] = []  # column-padded row blocks, emission order
-
-    def emit(col0: int, block: jnp.ndarray) -> None:
-        slabs.append(_pad_cols(block, col0, spec.num_cols))
+    tail_slabs: dict[int, jnp.ndarray] = {}
+    out_slabs: dict[int, jnp.ndarray] = {}
 
     for idx in reversed(spec.preorder):  # children strictly before parents
         sp = spec.nodes[idx]
         ix = plan.index[idx]
         cnt = counts[idx]
         x = data[idx]
+        row_to_group = jnp.asarray(ix.row_to_group)
+        pos_in_group = jnp.asarray(ix.pos_in_group)
 
         # --- HEADS_AND_TAILS (lines 11-16) --------------------------------
         # Capacity-padded plans weight the Givens sequences by the live-row
@@ -96,17 +174,27 @@ def figaro_r0(
         # nor receive a tail) and their data is zeroed so the padded slab rows
         # of R₀ come out identically zero. Dead rows are never segment starts
         # (plan_cache appends them to the last live group), so every division
-        # inside segmented_head_tail stays well-posed.
-        if ix.row_mask is not None:
-            weights = jnp.asarray(ix.row_mask, dtype=dtype)
-            x = x * weights[:, None]
+        # inside the head/tail formulas stays well-posed.
+        mask = (jnp.asarray(ix.row_mask, dtype=dtype)
+                if ix.row_mask is not None else None)
+        weights = mask if mask is not None else jnp.ones((sp.m,), dtype=dtype)
+        phi_circ_row = cnt["phi_circ"][row_to_group]
+        if use_kernel:
+            # Fused pass: masking (data_scale), scan, tail, √Φ° scaling and
+            # start-row zeroing in one kernel; heads gathered from the
+            # segment-final inclusive sums.
+            last = jnp.asarray(ix.group_start) + jnp.asarray(ix.group_count) - 1
+            live = jnp.asarray(ix.group_count) > 0
+            slab, heads, _ = nf_ops.fused_node_pass(
+                x, weights, pos_in_group, jnp.sqrt(phi_circ_row), last, live,
+                data_scale=mask)
+            tail_slabs[idx] = slab
         else:
-            weights = jnp.ones((sp.m,), dtype=dtype)
-        heads, tails, _ = segmented_head_tail(
-            x, weights, jnp.asarray(ix.row_to_group),
-            jnp.asarray(ix.pos_in_group), sp.K, use_kernel=use_kernel)
-        phi_circ_row = cnt["phi_circ"][jnp.asarray(ix.row_to_group)]
-        emit(sp.col_start, tails * jnp.sqrt(phi_circ_row)[:, None])
+            if mask is not None:
+                x = x * mask[:, None]
+            heads, tails, _ = segmented_head_tail(
+                x, weights, row_to_group, pos_in_group, sp.K)
+            tail_slabs[idx] = tails * jnp.sqrt(phi_circ_row)[:, None]
 
         scales = jnp.sqrt(cnt["rpk"])  # √|S_i^x̄|, one per key
         # --- PROCESS_AND_JOIN_CHILDREN (lines 17-26) ----------------------
@@ -133,18 +221,36 @@ def figaro_r0(
 
         # --- PROJECT_AWAY_JOIN_ATTRIBUTES (lines 27-34) / root (lines 7-8) -
         if sp.parent >= 0:
-            gheads, gtails, _ = segmented_head_tail(
-                data_mat, scales, jnp.asarray(ix.group_to_pgroup),
-                jnp.asarray(ix.pos_in_pgroup), sp.P, use_kernel=use_kernel)
-            phi_up_group = cnt["phi_up"][jnp.asarray(ix.group_to_pgroup)]
-            emit(sp.subtree_start, gtails * jnp.sqrt(phi_up_group)[:, None])
+            group_to_pgroup = jnp.asarray(ix.group_to_pgroup)
+            pos_in_pgroup = jnp.asarray(ix.pos_in_pgroup)
+            phi_up_group = cnt["phi_up"][group_to_pgroup]
+            if use_kernel:
+                # Dead group slots continue the last live pgroup's segment
+                # with scale 0, so the segment-final gather index may safely
+                # land on them — the inclusive sums are unchanged past the
+                # last live member.
+                last = jax.ops.segment_max(
+                    jnp.arange(sp.K), group_to_pgroup, num_segments=sp.P,
+                    indices_are_sorted=True)
+                live = jnp.asarray(ix.pgroup_count) > 0
+                slab, gheads, _ = nf_ops.fused_node_pass(
+                    data_mat, scales, pos_in_pgroup, jnp.sqrt(phi_up_group),
+                    last, live)
+                out_slabs[idx] = slab
+            else:
+                gheads, gtails, _ = segmented_head_tail(
+                    data_mat, scales, group_to_pgroup, pos_in_pgroup, sp.P)
+                out_slabs[idx] = gtails * jnp.sqrt(phi_up_group)[:, None]
             carried_data[idx] = gheads
             carried_scales[idx] = jnp.sqrt(cnt["phi_down"])
         else:
-            emit(sp.subtree_start, data_mat)
+            out_slabs[idx] = data_mat
 
-    r0 = jnp.concatenate(slabs, axis=0)
-    assert r0.shape[0] == spec.r0_rows, (r0.shape, spec.r0_rows)
+    if assembly == "band":
+        r0 = _assemble_band(spec, tail_slabs, out_slabs)
+    else:
+        r0 = _assemble_padded(spec, tail_slabs, out_slabs)
+    assert r0.shape == (spec.r0_rows, spec.num_cols), (r0.shape, spec.r0_rows)
     return r0
 
 
@@ -154,6 +260,7 @@ def figaro_r0_batched(
     *,
     dtype=jnp.float32,
     use_kernel: bool = False,
+    assembly: str = "padded",
 ) -> jnp.ndarray:
     """Algorithm 2 vmapped over a leading batch axis of the data matrices.
 
@@ -162,11 +269,13 @@ def figaro_r0_batched(
     one join structure serving B feature-sets per dispatch. Returns
     [B, r0_rows, num_cols].
     """
-    fn = functools.partial(figaro_r0, plan, dtype=dtype, use_kernel=use_kernel)
+    fn = functools.partial(figaro_r0, plan, dtype=dtype, use_kernel=use_kernel,
+                           assembly=assembly)
     return jax.vmap(lambda d: fn(list(d)))(tuple(data_batch))
 
 
-def figaro_r0_fn(plan: FigaroPlan, *, dtype=jnp.float32, use_kernel: bool = False):
+def figaro_r0_fn(plan: FigaroPlan, *, dtype=jnp.float32,
+                 use_kernel: bool = False, assembly: str = "padded"):
     """A jittable closure ``data_list -> R₀`` for a fixed plan.
 
     Kept for the pre-engine call sites; new code should go through
@@ -175,6 +284,7 @@ def figaro_r0_fn(plan: FigaroPlan, *, dtype=jnp.float32, use_kernel: bool = Fals
     """
 
     def fn(data: Sequence[jnp.ndarray]) -> jnp.ndarray:
-        return figaro_r0(plan, data, dtype=dtype, use_kernel=use_kernel)
+        return figaro_r0(plan, data, dtype=dtype, use_kernel=use_kernel,
+                         assembly=assembly)
 
     return jax.jit(fn)

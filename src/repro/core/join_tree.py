@@ -45,6 +45,7 @@ __all__ = [
     "NodeSpec",
     "NodeIndex",
     "PlanSpec",
+    "SlabBand",
     "NodePlan",
     "FigaroPlan",
     "build_plan",
@@ -233,6 +234,21 @@ class NodeIndex:
 
 
 @dataclasses.dataclass(frozen=True)
+class SlabBand:
+    """Band metadata of one emitted R₀ slab: rows [row0, row0+rows) hold node
+    ``node``'s columns [col0, col0+width) and are zero outside that band —
+    what band-wise assembly (`figaro_r0(assembly="band")`) materializes
+    instead of padding every slab to the full ``num_cols`` width."""
+
+    node: int
+    kind: str  # "tail" (m scaled-tail rows) | "out" (K gen-tail/head rows)
+    row0: int
+    rows: int
+    col0: int
+    width: int
+
+
+@dataclasses.dataclass(frozen=True)
 class PlanSpec:
     """Static, hashable whole-plan metadata (the compilation signature)."""
 
@@ -243,6 +259,22 @@ class PlanSpec:
     total_rows: int  # M = sum of m_i
     r0_rows: int  # rows of the (padded) almost-upper-triangular R0
     names: tuple[str, ...]
+    # R₀ band layout in emission (row) order. Derived from `nodes` — always
+    # recomputed in __post_init__, so `dataclasses.replace` (capacity
+    # bucketing in plan_cache) can never leave it stale; any passed-in value
+    # is overwritten.
+    bands: tuple[SlabBand, ...] = ()
+
+    def __post_init__(self) -> None:
+        bands: list[SlabBand] = []
+        for i in reversed(self.preorder):
+            sp = self.nodes[i]
+            bands.append(SlabBand(node=i, kind="tail", row0=sp.tail_row0,
+                                  rows=sp.m, col0=sp.col_start, width=sp.n))
+            bands.append(SlabBand(node=i, kind="out", row0=sp.out_row0,
+                                  rows=sp.K, col0=sp.subtree_start,
+                                  width=sp.subtree_width))
+        object.__setattr__(self, "bands", tuple(bands))
 
 
 @dataclasses.dataclass

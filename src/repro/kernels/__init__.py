@@ -1,6 +1,10 @@
 """Pallas TPU kernels (validated on CPU with interpret=True):
 
-  head_tail/   segmented generalized head/tail — FiGaRo's inner loop
+  node_fused/  fused per-node FiGaRo pass (mask·head/tail·φ·emit) — hot path
+  head_tail/   segmented generalized head/tail — the unfused building block
   panel_qr/    Householder panel factorization — post-processing hot spot
-  linear_scan/ chunked diagonal linear RNN — Mamba/RWKV6 mixer hot spot
+  flash_attn/  fused GQA attention — serving-side mixer hot spot
+
+Platform policy (compiled on TPU/GPU, interpreted elsewhere, explicit
+``interpret=`` override) is shared via `_platform.py`.
 """

@@ -1,0 +1,55 @@
+"""One platform policy for every Pallas kernel wrapper.
+
+Each ``kernels/*/ops.py`` used to carry its own copy of ``_on_tpu()`` and the
+``interpret=not _on_tpu()`` dispatch decision. This module is the single
+source of truth:
+
+  * `backend()`            — `jax.default_backend()` (cached; the backend
+                             cannot change after the first dispatch).
+  * `on_accelerator()`     — True on TPU **or GPU**: platforms where Pallas
+                             lowers to a real kernel (Mosaic on TPU, Triton
+                             on GPU) instead of the interpreter.
+  * `resolve_interpret(x)` — the value every wrapper passes as
+                             ``interpret=``: an explicit override wins
+                             (``True``/``False``), ``None`` falls back to
+                             interpret-off-accelerator. The override is how
+                             tests force the interpreter on an accelerator
+                             (numerics triage) or assert compiled lowering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+__all__ = ["backend", "on_accelerator", "on_tpu", "resolve_interpret"]
+
+_ACCELERATORS = ("tpu", "gpu")
+
+
+@functools.lru_cache(maxsize=None)
+def backend() -> str:
+    """The default JAX backend name ("cpu" / "gpu" / "tpu")."""
+    return jax.default_backend()
+
+
+def on_tpu() -> bool:
+    return backend() == "tpu"
+
+
+def on_accelerator() -> bool:
+    """True where Pallas compiles to a native kernel (TPU or GPU)."""
+    return backend() in _ACCELERATORS
+
+
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Interpret-mode decision for a kernel dispatch.
+
+    ``None`` (the default everywhere) = run compiled on an accelerator and
+    interpreted elsewhere (CPU — the validation mode of this container). An
+    explicit ``True``/``False`` is honored verbatim.
+    """
+    if interpret is not None:
+        return bool(interpret)
+    return not on_accelerator()

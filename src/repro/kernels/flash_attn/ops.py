@@ -1,27 +1,26 @@
 """Jitted public wrapper for the fused attention kernel.
 
 Folds GQA batch/head layout ([B, T, Hkv, G, hd] -> [B*Hkv*G] kernel heads,
-with K/V broadcast per group) and dispatches interpret mode off-TPU —
-the validation mode of this container.
+with K/V broadcast per group) and dispatches interpret mode off-accelerator
+(`repro.kernels._platform`) — the validation mode of this container; pass
+``interpret=`` explicitly to override.
 """
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
+
+from repro.kernels._platform import resolve_interpret
 
 from .kernel import (DEFAULT_BLOCK_KV, DEFAULT_BLOCK_Q,
                      flash_attention_kernel)
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def flash_attention(q, k, v, q_pos, k_pos, *, causal: bool = True,
                     window: int | None = None,
                     block_q: int = DEFAULT_BLOCK_Q,
-                    block_kv: int = DEFAULT_BLOCK_KV):
+                    block_kv: int = DEFAULT_BLOCK_KV,
+                    interpret: bool | None = None):
     """Fused GQA attention.
 
     Args:
@@ -45,6 +44,6 @@ def flash_attention(q, k, v, q_pos, k_pos, *, causal: bool = True,
     out = flash_attention_kernel(qh, kh, vh, qp, kp, causal=causal,
                                  window=window, block_q=block_q,
                                  block_kv=block_kv,
-                                 interpret=not _on_tpu())
+                                 interpret=resolve_interpret(interpret))
     return (out.reshape(b, hkv, g, tq, hd).transpose(0, 3, 1, 2, 4)
             .reshape(b, tq, hq, hd))

@@ -1,30 +1,28 @@
 """Jitted public wrapper for the segmented-tail kernel.
 
-On TPU the Pallas kernel runs compiled; everywhere else it runs in
+On TPU/GPU the Pallas kernel runs compiled; everywhere else it runs in
 ``interpret=True`` mode (the kernel body executed by XLA on CPU), which is the
-validation mode this container uses.
+validation mode this container uses. The platform policy lives in
+`repro.kernels._platform`; pass ``interpret=`` explicitly to override it.
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from repro.kernels._platform import resolve_interpret
 
 from .kernel import segmented_tail_kernel
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def segmented_tail(data, wa, first, coef_a, coef_b, *,
-                   block_rows: int = 256, block_cols: int = 256):
+                   block_rows: int = 256, block_cols: int = 256,
+                   interpret: bool | None = None):
     """Segmented generalized-tail transform (see kernel.py).
 
     Args:
       data, wa: [m, n]
       first: [m] or [m,1] segment-start indicator
       coef_a, coef_b: [m] or [m,1]
+      interpret: force interpreter mode on/off (None = off-accelerator only).
     Returns [m, n] tails (rows at segment starts are garbage — caller masks).
     """
     if first.ndim == 1:
@@ -37,4 +35,4 @@ def segmented_tail(data, wa, first, coef_a, coef_b, *,
         data, wa, first.astype(data.dtype), coef_a.astype(data.dtype),
         coef_b.astype(data.dtype),
         block_rows=block_rows, block_cols=block_cols,
-        interpret=not _on_tpu())
+        interpret=resolve_interpret(interpret))

@@ -1,0 +1,18 @@
+"""Fused per-node FiGaRo pass: mask + segmented head/tail + φ-scale + emit.
+
+One Pallas kernel per head/tail pass of a join-tree node (two per node), one
+HBM round-trip each — see `kernel.py` for the fusion, `ops.py` for the public
+`fused_node_pass`, `ref.py` for the XLA reference the tests compare against.
+"""
+
+from .kernel import AUTOTUNE, choose_blocks, node_fused_kernel
+from .ops import fused_node_pass
+from .ref import fused_node_pass_ref
+
+__all__ = [
+    "AUTOTUNE",
+    "choose_blocks",
+    "node_fused_kernel",
+    "fused_node_pass",
+    "fused_node_pass_ref",
+]

@@ -1,0 +1,85 @@
+"""Jitted public wrapper: one fused FiGaRo node pass, heads included.
+
+`fused_node_pass` is the kernel-path unit `core.figaro.figaro_r0` calls twice
+per join-tree node (HEADS_AND_TAILS and PROJECT_AWAY_JOIN_ATTRS). All the
+[m, n]-sized work — live-row masking, the weighted segmented scan, the
+generalized-tail formula, segment-start zeroing and √Φ emission scaling —
+happens inside the single `node_fused` Pallas kernel (one HBM round-trip).
+What stays in XLA is O(m)/O(K) vector work: the weight-norm scans that feed
+the tail coefficients, and the head extraction, which gathers each segment's
+**final** inclusive sum instead of re-reducing the matrix with `segment_sum`.
+
+Interpret-mode policy comes from `repro.kernels._platform` (compiled on
+TPU/GPU, interpreted elsewhere); pass ``interpret=`` explicitly to override.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.heads_tails import segmented_cumsum
+from repro.kernels._platform import resolve_interpret
+
+from .kernel import node_fused_kernel
+
+
+def fused_node_pass(
+    data: jnp.ndarray,        # [m, n] node rows, NOT pre-masked
+    weights: jnp.ndarray,     # [m] Givens weight v (dead rows: 0)
+    pos_in_seg: jnp.ndarray,  # [m] 0 at segment starts
+    emit_scale: jnp.ndarray,  # [m] √Φ per row (0 allowed; starts auto-zeroed)
+    last_of_seg: jnp.ndarray,  # [K] row index of each segment's last member
+    seg_live: jnp.ndarray,    # [K] bool — live segment slots
+    *,
+    data_scale: jnp.ndarray | None = None,  # [m] row mask (None = ones)
+    block_rows: int | None = None,
+    block_cols: int | None = None,
+    interpret: bool | None = None,
+):
+    """One fused head/tail pass over contiguous row segments.
+
+    Returns:
+      slab:  [m, n] — ``emit_scale·T(seg, v)`` rows, segment starts (and every
+             masked row) exactly zero: the finished R₀ slab.
+      heads: [K, n] — ``H(seg, v)`` per live segment, zeros on dead slots.
+      norms: [K]    — ‖v_seg‖₂, zeros on dead slots.
+
+    Dead capacity-slot contract (see `core.plan_cache`): dead rows carry
+    ``weights == data_scale == 0`` and are never segment starts, dead segment
+    slots have ``seg_live`` False and may point ``last_of_seg`` anywhere.
+    """
+    m = data.shape[0]
+    dtype = data.dtype
+    weights = weights.astype(dtype)
+    first = (pos_in_seg == 0)
+    if data_scale is None:
+        data_scale = jnp.ones((m,), dtype)
+    # Tail coefficients from [m] weight scans (cheap; every [m, n] op is in
+    # the kernel). Same guarded formulas as `segmented_head_tail`: dead rows
+    # (weight 0, never starts) get coef_a=1, coef_b=0 and a zeroed data row,
+    # so their slab rows come out identically zero.
+    w2 = weights * weights
+    c_incl = segmented_cumsum(w2, first)
+    c_excl = c_incl - w2
+    c_excl_safe = jnp.where(pos_in_seg > 0, c_excl, 1.0)
+    coef_a = jnp.sqrt(c_excl_safe / c_incl)
+    coef_b = -weights / jnp.sqrt(c_excl_safe * c_incl)
+
+    col = lambda v: v.astype(dtype)[:, None]
+    # Fold the segment-start zeroing into the emission scale: a start row's
+    # "tail" is garbage (it is the head's slot), so it must never emit.
+    emit = emit_scale * (pos_in_seg > 0)
+    slab, s_incl = node_fused_kernel(
+        data, col(data_scale), col(weights), col(first), col(coef_a),
+        col(coef_b), col(emit),
+        block_rows=block_rows, block_cols=block_cols,
+        interpret=resolve_interpret(interpret))
+
+    # Heads by gather: the inclusive sums at a segment's last row ARE the
+    # segment totals (dead trailing rows add weight-0 nothing).
+    last = jnp.clip(last_of_seg, 0, m - 1)
+    norms = jnp.sqrt(c_incl[last])
+    heads = s_incl[last] / jnp.where(norms > 0, norms, 1.0)[:, None]
+    heads = jnp.where(seg_live[:, None], heads, 0.0).astype(dtype)
+    norms = jnp.where(seg_live, norms, 0.0).astype(dtype)
+    return slab, heads, norms

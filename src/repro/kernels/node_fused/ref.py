@@ -1,0 +1,52 @@
+"""Pure-XLA reference for the fused node pass (same contract as ops.py).
+
+The reference is what `kernels_bench` and the parity tests compare the Pallas
+kernel against, and what documents the kernel's semantics without Pallas
+block/grid mechanics. It reuses `segmented_cumsum` (associative scan), so its
+summation order matches the kernel's segmented scan — differences between the
+two are genuine kernel bugs, not reassociation noise.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.heads_tails import segmented_cumsum
+
+
+def fused_node_pass_ref(
+    data: jnp.ndarray,
+    weights: jnp.ndarray,
+    pos_in_seg: jnp.ndarray,
+    emit_scale: jnp.ndarray,
+    last_of_seg: jnp.ndarray,
+    seg_live: jnp.ndarray,
+    *,
+    data_scale: jnp.ndarray | None = None,
+):
+    """Reference (slab, heads, norms) — see `ops.fused_node_pass`."""
+    m = data.shape[0]
+    dtype = data.dtype
+    weights = weights.astype(dtype)
+    first = (pos_in_seg == 0)
+    if data_scale is not None:
+        data = data * data_scale.astype(dtype)[:, None]
+
+    w2 = weights * weights
+    wa = data * weights[:, None]
+    c_incl = segmented_cumsum(w2, first)
+    s_incl = segmented_cumsum(wa, first)
+    c_excl = c_incl - w2
+    s_excl = s_incl - wa
+    c_excl_safe = jnp.where(pos_in_seg > 0, c_excl, 1.0)
+    tails = (jnp.sqrt(c_excl_safe / c_incl)[:, None] * data
+             - (weights / jnp.sqrt(c_excl_safe * c_incl))[:, None] * s_excl)
+    emit = emit_scale * (pos_in_seg > 0)
+    slab = emit.astype(dtype)[:, None] * tails
+
+    last = jnp.clip(last_of_seg, 0, m - 1)
+    norms = jnp.sqrt(c_incl[last])
+    heads = s_incl[last] / jnp.where(norms > 0, norms, 1.0)[:, None]
+    heads = jnp.where(seg_live[:, None], heads, 0.0).astype(dtype)
+    norms = jnp.where(seg_live, norms, 0.0).astype(dtype)
+    return slab, heads, norms

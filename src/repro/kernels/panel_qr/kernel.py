@@ -23,19 +23,24 @@ from jax.experimental import pallas as pl
 
 
 def _panel_kernel(a_ref, v_ref, beta_ref, r_ref, *, m: int, nb: int):
-    a = a_ref[...].astype(jnp.float32)  # [m, nb]
+    # Accumulate in the I/O precision: f64 panels (the x64 post-processing
+    # path) keep f64 Householder math; everything else runs the MXU-native
+    # f32. A hardcoded f32 here silently cost ~1e-6 in the final R of an
+    # otherwise-f64 pipeline.
+    acc = jnp.float64 if a_ref.dtype == jnp.float64 else jnp.float32
+    a = a_ref[...].astype(acc)  # [m, nb]
     rows = jax.lax.broadcasted_iota(jnp.int32, (m, 1), 0)
     cols = jax.lax.broadcasted_iota(jnp.int32, (1, nb), 1)
 
     def step(k, carry):
         a, vs, betas = carry
-        colmask = (cols == k).astype(jnp.float32)        # [1, nb]
+        colmask = (cols == k).astype(acc)        # [1, nb]
         col = jnp.sum(a * colmask, axis=1, keepdims=True)  # [m, 1]
-        below = (rows >= k).astype(jnp.float32)
+        below = (rows >= k).astype(acc)
         x = col * below
         sigma2 = jnp.sum(x * x)
         sigma = jnp.sqrt(sigma2)
-        at_k = (rows == k).astype(jnp.float32)
+        at_k = (rows == k).astype(acc)
         xk = jnp.sum(x * at_k)
         sgn = jnp.where(xk >= 0, 1.0, -1.0)
         alpha = -sgn * sigma
@@ -51,14 +56,14 @@ def _panel_kernel(a_ref, v_ref, beta_ref, r_ref, *, m: int, nb: int):
         betas = betas + beta * colmask
         return a, vs, betas
 
-    vs0 = jnp.zeros((m, nb), jnp.float32)
-    betas0 = jnp.zeros((1, nb), jnp.float32)
+    vs0 = jnp.zeros((m, nb), acc)
+    betas0 = jnp.zeros((1, nb), acc)
     a, vs, betas = jax.lax.fori_loop(0, min(m, nb), step, (a, vs0, betas0))
 
     v_ref[...] = vs.astype(v_ref.dtype)
     beta_ref[...] = betas.astype(beta_ref.dtype)
     # Zero strictly-below-diagonal residue (numerical dust from the updates).
-    upper = (rows <= cols).astype(jnp.float32)
+    upper = (rows <= cols).astype(acc)
     r_ref[...] = (a * upper).astype(r_ref.dtype)
 
 
@@ -67,7 +72,8 @@ def panel_qr_kernel(a: jnp.ndarray, *, interpret: bool = False):
     """Factor one panel [m, nb] (entirely VMEM-resident).
 
     Returns (V [m, nb] unit-diagonal reflectors, beta [nb], R_panel [m, nb]).
-    VMEM budget: 4 copies of the panel in f32 — keep m·nb ≲ 512·128.
+    VMEM budget: 4 copies of the panel at the accumulation dtype (f64 for
+    f64 panels, f32 otherwise) — keep m·nb ≲ 512·128 (f32) / 512·64 (f64).
     """
     m, nb = a.shape
     kern = functools.partial(_panel_kernel, m=m, nb=nb)

@@ -1,16 +1,16 @@
-"""Jitted public wrapper for the panel-QR kernel (interpret=True off-TPU)."""
+"""Jitted public wrapper for the panel-QR kernel.
+
+Compiled on TPU/GPU, interpreted elsewhere (`repro.kernels._platform`);
+pass ``interpret=`` explicitly to override the platform decision.
+"""
 
 from __future__ import annotations
 
-import jax
+from repro.kernels._platform import resolve_interpret
 
 from .kernel import panel_qr_kernel
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def panel_qr(a):
+def panel_qr(a, *, interpret: bool | None = None):
     """Householder panel factorization: (V, beta, R_panel) for [m, nb] input."""
-    return panel_qr_kernel(a, interpret=not _on_tpu())
+    return panel_qr_kernel(a, interpret=resolve_interpret(interpret))

@@ -61,7 +61,8 @@ def make_figaro_server(plan: FigaroPlan | PlanHolder, *, kind: str = "qr",
                        label_col: int | None = None, k: int | None = None,
                        ridge: float = 0.0,
                        dtype=jnp.float32, method: str = "tsqr",
-                       leaf_rows: int = 256,
+                       leaf_rows: int = 256, use_kernel: bool = False,
+                       assembly: str = "padded",
                        engine: FigaroEngine | None = None,
                        mesh: Mesh | None = None, shard_axis: str = "data",
                        max_batch: int = 32,
@@ -119,8 +120,13 @@ def make_figaro_server(plan: FigaroPlan | PlanHolder, *, kind: str = "qr",
     engine = engine if engine is not None else FigaroEngine(donate_data=True)
     shard = None if mesh is None else (mesh, shard_axis)
 
+    # use_kernel / assembly ride the static half of every dispatch, so the
+    # serving executables are the fused-kernel / band-assembly programs when
+    # the session (or caller) asked for them — same cache-key discipline as
+    # direct engine calls.
     common = dict(batched=True, shard=shard, dtype=dtype, method=method,
-                  leaf_rows=leaf_rows)
+                  leaf_rows=leaf_rows, use_kernel=use_kernel,
+                  assembly=assembly)
     dispatch = {
         "qr": lambda plan, batch, cap: engine.qr(
             plan, batch, batch_capacity=cap, **common),

@@ -1,0 +1,212 @@
+"""Fused kernel path + band assembly through the full façade.
+
+`figaro_r0(use_kernel=True)` routes every join-tree node through the
+`kernels.node_fused` Pallas kernel (interpret=True on CPU) and
+``assembly="band"`` materializes R₀ band-by-band instead of padding every
+slab to full width. Both are numerics-preserving options riding the static
+half of the dispatch signature, so they must agree with the XLA/padded path
+at dtype tolerance through every surface: `Session`/`JoinDataset` compute
+methods, capacity-padded plans with dead rows, batched and mesh-sharded
+dispatch, and the async server — with zero extra retraces on repeats.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import figaro
+from repro.core.engine import FigaroEngine
+from repro.core.figaro import assembly_traffic, figaro_r0
+from repro.core.join_tree import build_plan
+from repro.core.plan_cache import build_capacity_plan, bucket_spec
+from repro.data.relational import cartesian, retailer_like, yelp_like
+
+TREES = {
+    "retailer": lambda: retailer_like(scale=60, cols=2),
+    "yelp": lambda: yelp_like(scale=40, cols=2),  # many-to-many
+    "cartesian": lambda: cartesian(7, 5, n1=2, n2=2),
+}
+
+ATOL = 1e-9  # f64 pipeline; kernel accumulates in f64 for f64 I/O
+
+
+def _sessions():
+    """(kernel+band session, XLA+padded session) on private engines."""
+    k = figaro.Session(engine=FigaroEngine(donate_data=False), bucket=False,
+                      use_kernel=True, assembly="band")
+    x = figaro.Session(engine=FigaroEngine(donate_data=False), bucket=False)
+    return k, x
+
+
+# -- façade parity: qr / svd / pca / lsq, kernel+band vs XLA+padded ----------
+
+
+@pytest.mark.parametrize("name", list(TREES))
+def test_facade_qr_parity(name):
+    tree = TREES[name]()
+    sk, sx = _sessions()
+    r_k = sk.from_tree(tree).qr(dtype=jnp.float64)
+    r_x = sx.from_tree(tree).qr(dtype=jnp.float64)
+    np.testing.assert_allclose(np.asarray(r_k), np.asarray(r_x), atol=ATOL)
+
+
+@pytest.mark.parametrize("name", list(TREES))
+def test_facade_svd_pca_lsq_parity(name):
+    tree = TREES[name]()
+    sk, sx = _sessions()
+    dk, dx = sk.from_tree(tree), sx.from_tree(tree)
+
+    s_k, vt_k = dk.svd(dtype=jnp.float64)
+    s_x, vt_x = dx.svd(dtype=jnp.float64)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_x), atol=ATOL)
+    np.testing.assert_allclose(np.asarray(vt_k), np.asarray(vt_x), atol=ATOL)
+
+    p_k = dk.pca(k=2, dtype=jnp.float64)
+    p_x = dx.pca(k=2, dtype=jnp.float64)
+    np.testing.assert_allclose(np.asarray(p_k.components),
+                               np.asarray(p_x.components), atol=ATOL)
+    np.testing.assert_allclose(np.asarray(p_k.explained_variance),
+                               np.asarray(p_x.explained_variance), atol=ATOL)
+
+    b_k, res_k = dk.lsq(0, dtype=jnp.float64)
+    b_x, res_x = dx.lsq(0, dtype=jnp.float64)
+    np.testing.assert_allclose(np.asarray(b_k), np.asarray(b_x), atol=ATOL)
+    np.testing.assert_allclose(np.asarray(res_k), np.asarray(res_x),
+                               atol=ATOL)
+
+
+# -- capacity plans: dead (padded) rows stay exactly zero --------------------
+
+
+@pytest.mark.parametrize("name", list(TREES))
+def test_capacity_plan_dead_rows_exactly_zero(name):
+    tree = TREES[name]()
+    cap = build_capacity_plan(tree, headroom=3)
+    eng = FigaroEngine(donate_data=False)
+    r0_x = np.asarray(eng.r0(cap, dtype=jnp.float64))
+    r0_k = np.asarray(eng.r0(cap, dtype=jnp.float64, use_kernel=True,
+                             assembly="band"))
+    np.testing.assert_allclose(r0_k, r0_x, atol=ATOL)
+    # headroom=3 guarantees dead slots; their R0 rows must be EXACTLY zero
+    # through the kernel path (masking rides the kernel's data_scale input,
+    # not a separate pre-pass).
+    dead = ~np.any(r0_x, axis=1)
+    assert dead.any(), "capacity plan with headroom should have dead rows"
+    assert not np.any(r0_k[dead]), "kernel path leaked into dead R0 rows"
+
+    r_x = np.asarray(eng.qr(cap, dtype=jnp.float64))
+    r_k = np.asarray(eng.qr(cap, dtype=jnp.float64, use_kernel=True,
+                            assembly="band"))
+    np.testing.assert_allclose(r_k, r_x, atol=ATOL)
+
+
+# -- batched / sharded dispatch + zero extra retraces ------------------------
+
+
+def test_batched_and_sharded_kernel_dispatch_zero_retraces():
+    tree = retailer_like(scale=60, cols=2)
+    cap = build_capacity_plan(tree, headroom=3)
+    eng = FigaroEngine(donate_data=False)
+    rng = np.random.default_rng(0)
+    B = 3
+    batch = tuple(
+        jnp.asarray(np.stack([np.asarray(d, np.float64) * (1 + 0.1 * b)
+                              for b in range(B)]))
+        for d in cap.data)
+
+    rb_k = eng.qr(cap, batch, batched=True, dtype=jnp.float64,
+                  use_kernel=True, assembly="band")
+    rb_x = eng.qr(cap, batch, batched=True, dtype=jnp.float64)
+    np.testing.assert_allclose(np.asarray(rb_k), np.asarray(rb_x), atol=ATOL)
+
+    from repro.launch.mesh import make_data_mesh
+
+    mesh = make_data_mesh()
+    rs_k = eng.qr(cap, batch, batched=True, shard=mesh, dtype=jnp.float64,
+                  use_kernel=True, assembly="band")
+    np.testing.assert_allclose(np.asarray(rs_k), np.asarray(rb_x), atol=ATOL)
+
+    # Every signature is now compiled: repeats are launch-only.
+    traces = eng.trace_counts()
+    _ = eng.qr(cap, batch, batched=True, dtype=jnp.float64,
+               use_kernel=True, assembly="band")
+    _ = eng.qr(cap, batch, batched=True, shard=mesh, dtype=jnp.float64,
+               use_kernel=True, assembly="band")
+    assert eng.trace_counts() == traces, "kernel-path repeat retraced"
+
+
+def test_kernel_and_assembly_are_distinct_cache_entries():
+    tree = cartesian(7, 5, n1=2, n2=2)
+    plan = build_plan(tree)
+    eng = FigaroEngine(donate_data=False)
+    for use_kernel in (False, True):
+        for asm in ("padded", "band"):
+            eng.qr(plan, dtype=jnp.float64, use_kernel=use_kernel,
+                   assembly=asm)
+    assert eng.trace_count("qr") == 4  # four static corners, four traces
+    for use_kernel in (False, True):  # repeats: zero extra
+        for asm in ("padded", "band"):
+            eng.qr(plan, dtype=jnp.float64, use_kernel=use_kernel,
+                   assembly=asm)
+    assert eng.trace_count("qr") == 4
+
+
+# -- async server ------------------------------------------------------------
+
+
+def test_async_server_kernel_parity():
+    tree = retailer_like(scale=60, cols=2)
+    sk, sx = _sessions()
+    dk, dx = sk.from_tree(tree), sx.from_tree(tree)
+    req = tuple(np.asarray(d, np.float64) for d in dk.plan.data)
+    srv_k = dk.serve("qr", dtype=jnp.float64)
+    srv_x = dx.serve("qr", dtype=jnp.float64)
+    try:
+        r_k = srv_k.submit(req).result()
+        r_x = srv_x.submit(req).result()
+    finally:
+        srv_k.close()
+        srv_x.close()
+    np.testing.assert_allclose(np.asarray(r_k), np.asarray(r_x), atol=ATOL)
+
+
+# -- band assembly layout + traffic model ------------------------------------
+
+
+@pytest.mark.parametrize("name", list(TREES))
+def test_band_assembly_bit_identical(name):
+    tree = TREES[name]()
+    plan = build_plan(tree)
+    r_pad = figaro_r0(plan, dtype=jnp.float64, assembly="padded")
+    r_band = figaro_r0(plan, dtype=jnp.float64, assembly="band")
+    np.testing.assert_array_equal(np.asarray(r_pad), np.asarray(r_band))
+
+
+@pytest.mark.parametrize("name", list(TREES))
+def test_band_assembly_traffic_reduction(name):
+    spec = build_plan(TREES[name]()).spec
+    assert assembly_traffic(spec, assembly="band") <= \
+        assembly_traffic(spec, assembly="padded")
+    # Bands tile R0's rows exactly once: every R0 row belongs to one band.
+    covered = np.zeros(spec.r0_rows, bool)
+    for b in spec.bands:
+        assert 0 <= b.col0 and b.col0 + b.width <= spec.num_cols
+        assert not covered[b.row0:b.row0 + b.rows].any(), "band overlap"
+        covered[b.row0:b.row0 + b.rows] = True
+    assert covered.all(), "bands leave R0 rows uncovered"
+
+
+def test_bands_recomputed_under_bucketing():
+    spec = build_plan(retailer_like(scale=60, cols=2)).spec
+    bucketed = bucket_spec(spec, headroom=3)
+    assert bucketed.bands != spec.bands  # capacities changed the layout
+    assert bucketed.bands == type(bucketed)(  # derived, never stale
+        nodes=bucketed.nodes, preorder=bucketed.preorder, root=bucketed.root,
+        num_cols=bucketed.num_cols, total_rows=bucketed.total_rows,
+        r0_rows=bucketed.r0_rows, names=bucketed.names).bands
+
+
+def test_bad_assembly_rejected():
+    plan = build_plan(cartesian(3, 3, n1=1, n2=1))
+    with pytest.raises(ValueError, match="assembly"):
+        figaro_r0(plan, dtype=jnp.float64, assembly="diagonal")
