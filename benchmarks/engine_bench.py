@@ -370,6 +370,27 @@ def run(csv: Csv, *, fast: bool = False) -> None:
             add(case, f"speedup_depth{depth}", best["sync"] / t_pipe)
         add(case, "traces_qr_batched", serve_engine.trace_count("qr_batched"))
 
+    # -- figaro-lint overhead: the analysis CI job must stay interactive ----
+    # Full-repo wall time of the AST analyzer (all five rule families over
+    # src/). Pure host Python — no jit, no device. The bound is generous on
+    # purpose: tripping it means a rule went accidentally quadratic, not that
+    # the runner was busy.
+    from pathlib import Path
+
+    from repro.analysis import analyze_paths
+
+    repo = Path(__file__).resolve().parents[1]
+    t0 = time.perf_counter()
+    findings = analyze_paths([str(repo / "src")], root=str(repo))
+    t_lint = time.perf_counter() - t0
+    case = "analysis_overhead"
+    add(case, "wall_s", t_lint)
+    add(case, "files", sum(1 for _ in (repo / "src").rglob("*.py")))
+    add(case, "findings", len(findings))
+    assert t_lint < 10.0, (
+        f"figaro-lint full-repo pass took {t_lint:.2f}s (>= 10s budget) — "
+        f"a rule likely went quadratic")
+
     write_bench_json("engine", rows)
 
 

@@ -18,7 +18,9 @@ The whole FiGaRo path goes through ONE surface — `repro.figaro`
      and streaming `submit` + `server.append` off one shared plan state;
   8. accelerator knobs: `Session(use_kernel=, assembly=)` — the fused
      per-node Pallas kernel and band-wise R0 assembly, numerics-preserving
-     and cached per static signature.
+     and cached per static signature;
+  9. figaro-lint: `python -m repro.analysis` — the repo's own static
+     analyzer machine-checks the invariants steps 1-8 rely on.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -192,3 +194,33 @@ bytes_band = assembly_traffic(ds.plan.spec, assembly="band")
 print(f"band assembly       : {bytes_band / bytes_padded:.2f}x the padded "
       f"assembly bytes ({bytes_padded} -> {bytes_band})")
 print("OK — Session(use_kernel=, assembly=) select the accelerated paths.")
+
+# --- 9. running figaro-lint: the invariants above, machine-checked ----------
+# Everything this example leaned on is a structural invariant nothing at
+# runtime enforces: version-sensitive JAX spellings live only in
+# repro/compat.py (FIG001); the engine's _STATIC table matches each impl's
+# keyword-only options and plans pass THROUGH jit, never closed over
+# (FIG002 — the zero-retrace story of steps 4-7); core/ and kernels/ derive
+# dtypes from inputs instead of hardcoding float32 (FIG003); every
+# pallas_call routes interpret= through kernels/_platform.resolve_interpret
+# and grids divide ceil-padded dims (FIG004 — step 8's kernels); the async
+# server's shared state is written under its locks (FIG005 — step 7).
+#
+# The analyzer is pure stdlib (no jax import), so CI runs it uninstalled:
+#
+#   PYTHONPATH=src python -m repro.analysis src/                  # all rules
+#   PYTHONPATH=src python -m repro.analysis --baseline analysis_baseline.json src/
+#   PYTHONPATH=src python -m repro.analysis --report unused       # dead code
+#
+# Deliberate violations carry a trailing suppression with a reason:
+#
+#   return jax.jit(fn)  # figaro-lint: disable=FIG002 -- plan-closed by design
+#
+# (`disable-file=` at any line suppresses a rule module-wide.) Anything not
+# suppressed must be fixed or added to analysis_baseline.json with a
+# justification — CI fails on non-baselined findings. To add a rule: drop a
+# module in src/repro/analysis/rules/ subclassing `framework.Rule` (set
+# rule_id/severity/fix_hint, yield findings from check(ctx)), register it in
+# rules/__init__.all_rules, and give it known-bad/known-good fixtures in
+# tests/test_analysis.py.
+print("OK — see `python -m repro.analysis --help` for the linter surface.")

@@ -1,0 +1,246 @@
+"""Rule framework for figaro-lint: findings, suppressions, the file driver.
+
+A rule is a small class with a stable id (``FIG001``...), a default severity,
+and a ``check(ctx)`` generator over `Finding`s for one parsed file. The driver
+(`analyze_paths`) parses each file once, hands every rule the same
+`FileContext` (AST + source + resolved import aliases), and filters the
+yielded findings through the file's suppression comments:
+
+    expr  # figaro-lint: disable=FIG002 -- reason
+    # figaro-lint: disable-file=FIG003 -- reason
+
+Line suppressions match findings anchored on that physical line; file
+suppressions match the whole module. Suppressions should carry a
+``--``-separated reason for review, but the analyzer only needs the rule
+list.
+
+Everything here is stdlib-only on purpose: the CI analysis job runs the
+analyzer without installing jax.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import enum
+import os
+import re
+import tokenize
+from typing import Iterable, Iterator
+
+
+class Severity(enum.IntEnum):
+    """Ordered so ``max()`` over findings is the run's worst severity."""
+
+    WARNING = 1
+    ERROR = 2
+
+    def __str__(self) -> str:  # "error" in human output, not "Severity.ERROR"
+        return self.name.lower()
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str         # "FIG001"
+    severity: Severity
+    path: str         # repo-relative, posix separators
+    line: int         # 1-based
+    message: str
+    fix_hint: str = ""
+
+    def fingerprint(self) -> tuple[str, str, str]:
+        """Baseline identity: line numbers drift with unrelated edits, so the
+        baseline matches on (rule, path, message) instead."""
+        return (self.rule, self.path, self.message)
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "severity": str(self.severity),
+                "path": self.path, "line": self.line,
+                "message": self.message, "fix_hint": self.fix_hint}
+
+    def render(self) -> str:
+        hint = f"  [fix: {self.fix_hint}]" if self.fix_hint else ""
+        return (f"{self.path}:{self.line}: {self.rule} {self.severity}: "
+                f"{self.message}{hint}")
+
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*figaro-lint:\s*(disable|disable-file)\s*=\s*"
+    r"(?P<rules>[A-Z]{3}\d{3}(?:\s*,\s*[A-Z]{3}\d{3})*)")
+
+
+@dataclasses.dataclass
+class Suppressions:
+    by_line: dict[int, set[str]]  # physical line -> suppressed rule ids
+    file_wide: set[str]
+
+    def covers(self, finding: Finding) -> bool:
+        if finding.rule in self.file_wide:
+            return True
+        return finding.rule in self.by_line.get(finding.line, ())
+
+
+def _parse_suppressions(source: str) -> Suppressions:
+    """Comment scan via tokenize, so a suppression-looking *string literal*
+    in fixture code never suppresses anything."""
+    by_line: dict[int, set[str]] = {}
+    file_wide: set[str] = set()
+    lines = source.splitlines(keepends=True)
+    try:
+        tokens = tokenize.generate_tokens(iter(lines).__next__)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _SUPPRESS_RE.search(tok.string)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group("rules").split(",")}
+            if m.group(1) == "disable-file":
+                file_wide |= rules
+            else:
+                by_line.setdefault(tok.start[0], set()).update(rules)
+    except tokenize.TokenizeError:
+        pass  # unparsable files already surface as FIG000
+    return Suppressions(by_line, file_wide)
+
+
+class FileContext:
+    """Everything a rule sees for one file: AST, source, import aliases."""
+
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = path          # repo-relative posix path
+        self.source = source
+        self.tree = tree
+        self.lines = source.splitlines()
+        #: local alias -> dotted module/symbol it names, e.g.
+        #: {"jnp": "jax.numpy", "P": "jax.sharding.PartitionSpec"}
+        self.aliases = _collect_aliases(tree)
+
+    def resolve(self, node: ast.AST) -> str | None:
+        """Dotted name of a Name/Attribute chain with the leading alias
+        expanded: ``jnp.float32`` -> "jax.numpy.float32". None for anything
+        that is not a plain dotted chain."""
+        parts = _dotted_parts(node)
+        if parts is None:
+            return None
+        head = self.aliases.get(parts[0], parts[0])
+        return ".".join([head] + parts[1:])
+
+
+def _dotted_parts(node: ast.AST) -> list[str] | None:
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return parts[::-1]
+
+
+def _collect_aliases(tree: ast.Module) -> dict[str, str]:
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+class Rule:
+    """Base class: subclasses set the id/severity/hint and implement check."""
+
+    rule_id: str = "FIG000"
+    severity: Severity = Severity.ERROR
+    fix_hint: str = ""
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: FileContext, node: ast.AST | int, message: str,
+                *, severity: Severity | None = None,
+                fix_hint: str | None = None) -> Finding:
+        line = node if isinstance(node, int) else getattr(node, "lineno", 1)
+        return Finding(rule=self.rule_id,
+                       severity=self.severity if severity is None else severity,
+                       path=ctx.path, line=line, message=message,
+                       fix_hint=self.fix_hint if fix_hint is None else fix_hint)
+
+
+def _iter_py_files(paths: Iterable[str]) -> Iterator[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+        else:
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if d not in ("__pycache__", ".git"))
+                for f in sorted(filenames):
+                    if f.endswith(".py"):
+                        yield os.path.join(dirpath, f)
+
+
+def _relpath(path: str, root: str | None) -> str:
+    rel = os.path.relpath(path, root) if root else path
+    if rel.startswith(".." + os.sep):  # outside the root: keep it absolute
+        rel = os.path.abspath(path)
+    return rel.replace(os.sep, "/")
+
+
+def analyze_source(source: str, path: str,
+                   rules: Iterable[Rule]) -> list[Finding]:
+    """Analyze one in-memory module (the fixture-test entry point)."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(rule="FIG000", severity=Severity.ERROR, path=path,
+                        line=e.lineno or 1,
+                        message=f"syntax error: {e.msg}")]
+    ctx = FileContext(path, source, tree)
+    sup = _parse_suppressions(source)
+    out, seen = [], set()
+    for rule in rules:
+        for finding in rule.check(ctx):
+            # Dedupe: rules that walk nested scopes can surface one defect
+            # from two enclosing scopes.
+            key = (finding.rule, finding.line, finding.message)
+            if key not in seen and not sup.covers(finding):
+                seen.add(key)
+                out.append(finding)
+    return out
+
+
+def analyze_paths(paths: Iterable[str], *, rules: Iterable[Rule] | None = None,
+                  root: str | None = None) -> list[Finding]:
+    """Run every rule over every ``.py`` file under ``paths``.
+
+    ``root`` (default cwd) anchors the repo-relative paths findings carry —
+    the baseline and suppression story depends on paths being stable across
+    checkouts.
+    """
+    if rules is None:
+        from .rules import all_rules
+        rules = all_rules()
+    rules = list(rules)
+    root = os.getcwd() if root is None else root
+    findings: list[Finding] = []
+    for fpath in _iter_py_files(paths):
+        try:
+            with open(fpath, encoding="utf-8") as fh:
+                source = fh.read()
+        except (OSError, UnicodeDecodeError) as e:
+            findings.append(Finding(
+                rule="FIG000", severity=Severity.ERROR,
+                path=_relpath(fpath, root), line=1,
+                message=f"unreadable file: {e}"))
+            continue
+        findings.extend(analyze_source(source, _relpath(fpath, root), rules))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings

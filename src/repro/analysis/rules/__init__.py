@@ -1,0 +1,19 @@
+"""Rule registry: one module per rule family, aggregated here."""
+
+from __future__ import annotations
+
+from ..framework import Rule
+from .compat_pin import CompatPinRule
+from .dtype_drift import DtypeDriftRule
+from .lock_discipline import LockDisciplineRule
+from .pallas_kernel import PallasKernelRule
+from .retrace import RetraceHazardRule
+
+__all__ = ["all_rules", "CompatPinRule", "RetraceHazardRule",
+           "DtypeDriftRule", "PallasKernelRule", "LockDisciplineRule"]
+
+
+def all_rules() -> list[Rule]:
+    """Fresh rule instances (rules may keep per-run state)."""
+    return [CompatPinRule(), RetraceHazardRule(), DtypeDriftRule(),
+            PallasKernelRule(), LockDisciplineRule()]

@@ -1,0 +1,70 @@
+"""FIG001 — version-sensitive JAX symbols must come from repro/compat.py.
+
+The container pins a JAX whose spelling of ``shard_map`` / ``make_mesh`` /
+``AxisType`` / ``AbstractMesh`` / ``axis_size`` differs from the current
+surface; `repro.compat` is the one module allowed to touch the raw spellings
+and it normalizes all of them. A direct import anywhere else works on exactly
+one JAX version and silently breaks the pin contract.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..framework import FileContext, Finding, Rule, Severity
+
+#: `from <module> import <name>` spellings that bypass the shim. ``None``
+#: means every name in that module is version-sensitive.
+_SENSITIVE_FROM: dict[str, frozenset | None] = {
+    "jax.experimental.shard_map": None,
+    "jax.sharding": frozenset({"AxisType", "AbstractMesh"}),
+}
+
+#: fully-resolved dotted uses that bypass the shim.
+_SENSITIVE_DOTTED = frozenset({
+    "jax.shard_map",
+    "jax.make_mesh",
+    "jax.lax.axis_size",
+    "jax.sharding.AxisType",
+    "jax.sharding.AbstractMesh",
+    "jax.experimental.shard_map.shard_map",
+})
+
+_EXEMPT_SUFFIX = "repro/compat.py"
+
+
+class CompatPinRule(Rule):
+    rule_id = "FIG001"
+    severity = Severity.ERROR
+    fix_hint = ("import the symbol from repro.compat — the version shim is "
+                "the only module allowed to spell raw JAX names")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if ctx.path.endswith(_EXEMPT_SUFFIX):
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ImportFrom) and node.module:
+                allowed = _SENSITIVE_FROM.get(node.module, frozenset())
+                names = {a.name for a in node.names}
+                bad = names if allowed is None else names & allowed
+                for name in sorted(bad):
+                    yield self.finding(
+                        ctx, node,
+                        f"version-sensitive JAX import "
+                        f"`from {node.module} import {name}` outside "
+                        f"repro/compat.py")
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name in _SENSITIVE_FROM and a.name != "jax.sharding":
+                        yield self.finding(
+                            ctx, node,
+                            f"version-sensitive JAX import "
+                            f"`import {a.name}` outside repro/compat.py")
+            elif isinstance(node, ast.Attribute):
+                dotted = ctx.resolve(node)
+                if dotted in _SENSITIVE_DOTTED:
+                    yield self.finding(
+                        ctx, node,
+                        f"version-sensitive JAX symbol `{dotted}` used "
+                        f"outside repro/compat.py")

@@ -1,0 +1,111 @@
+"""FIG003 — hardcoded narrowing dtype literals where dtype must derive
+from inputs.
+
+The paper's accuracy claim (errors on par with database size, not join size)
+survives only because the pipeline never silently narrows: data rides in the
+caller's I/O dtype end to end, accumulators widen via the one approved idiom
+
+    acc = jnp.float64 if x.dtype == jnp.float64 else jnp.float32
+
+and join counts accumulate in float64 no matter what (float32 rounds exact
+counts past 2^24 — the PR 3 bug). Inside ``core/`` and ``kernels/`` this rule
+flags every narrowing float literal (``float32`` / ``float16`` /
+``bfloat16``) in a function *body*, with three deliberate outs:
+
+  * keyword defaults in a signature (``dtype=jnp.float32`` is the documented
+    I/O policy surface — the caller chooses);
+  * the accumulator idiom above (an IfExp whose branches are both dtype
+    attributes, and dtype literals inside comparisons — those are reads);
+  * ``float64`` and integer dtypes (widest — never a narrowing drift).
+
+In ``core/counts.py`` even the outs are closed: any sub-f64 float literal is
+an error (count accumulation narrower than f64).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..framework import FileContext, Finding, Rule, Severity
+
+_NARROWING = frozenset({"float32", "float16", "bfloat16"})
+_DTYPE_MODULES = ("jax.numpy.", "numpy.", "jax.")
+
+
+def _in_scope(path: str) -> bool:
+    return ("/core/" in path or "/kernels/" in path
+            or path.startswith(("core/", "kernels/")))
+
+
+def _narrowing_dtype(ctx: FileContext, node: ast.AST) -> str | None:
+    """"jax.numpy.float32" for a resolved narrowing dtype literal, else None."""
+    if not isinstance(node, ast.Attribute) or node.attr not in _NARROWING:
+        return None
+    dotted = ctx.resolve(node)
+    if dotted and dotted.startswith(_DTYPE_MODULES):
+        return dotted
+    return None
+
+
+def _is_dtype_attr(ctx: FileContext, node: ast.AST) -> bool:
+    if not isinstance(node, ast.Attribute):
+        return False
+    dotted = ctx.resolve(node)
+    return bool(dotted) and dotted.startswith(_DTYPE_MODULES)
+
+
+class DtypeDriftRule(Rule):
+    rule_id = "FIG003"
+    severity = Severity.ERROR
+    fix_hint = ("derive the dtype from the input (x.dtype) or widen via the "
+                "accumulator idiom `jnp.float64 if x.dtype == jnp.float64 "
+                "else jnp.float32`")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if not _in_scope(ctx.path):
+            return
+        counts_file = ctx.path.endswith("core/counts.py")
+        allowed = set() if counts_file else self._allowed_nodes(ctx)
+        for node in ast.walk(ctx.tree):
+            dotted = _narrowing_dtype(ctx, node)
+            if dotted is None or id(node) in allowed:
+                continue
+            if counts_file:
+                yield self.finding(
+                    ctx, node,
+                    f"count accumulation uses `{dotted}` — counts must "
+                    f"accumulate in float64 (float32 is exact only to 2^24)",
+                    fix_hint="use jnp.float64 / np.float64 for all count "
+                             "arithmetic")
+            else:
+                yield self.finding(
+                    ctx, node,
+                    f"hardcoded narrowing dtype `{dotted}` in a function "
+                    f"body — the I/O-dtype policy derives dtypes from "
+                    f"inputs")
+
+    def _allowed_nodes(self, ctx: FileContext) -> set[int]:
+        """ids of dtype-literal nodes sitting in an approved context."""
+        allowed: set[int] = set()
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                # Signature defaults: the caller-facing dtype policy.
+                a = node.args
+                for default in list(a.defaults) + [d for d in a.kw_defaults
+                                                   if d is not None]:
+                    for sub in ast.walk(default):
+                        allowed.add(id(sub))
+            elif isinstance(node, ast.IfExp):
+                # The accumulator idiom: both branches dtype attributes.
+                if (_is_dtype_attr(ctx, node.body)
+                        and _is_dtype_attr(ctx, node.orelse)):
+                    allowed.add(id(node.body))
+                    allowed.add(id(node.orelse))
+            elif isinstance(node, ast.Compare):
+                # `x.dtype == jnp.float64` and friends: reads, not drift.
+                for sub in [node.left] + list(node.comparators):
+                    for s in ast.walk(sub):
+                        allowed.add(id(s))
+        return allowed

@@ -1,0 +1,268 @@
+"""FIG004 — Pallas kernel-site invariants: interpret routing, grid safety,
+VMEM-budgeted autotune tables.
+
+Three ways a kernel site rots that nothing catches until a TPU run:
+
+  * ``interpret=`` policy: this container validates every kernel in
+    interpret mode on CPU and compiles on TPU/GPU; the decision lives in
+    `kernels/_platform.resolve_interpret` and NOWHERE else. A `pallas_call`
+    without an ``interpret=`` kwarg (silently always-compiled), with a
+    hardcoded True/False, or an ops-layer wrapper forwarding its unresolved
+    ``interpret=None`` parameter straight through all bypass the policy.
+  * grid truncation: a grid entry ``m // bm`` over a dim that was not first
+    padded to a multiple of ``bm`` silently drops the ragged tail rows.
+    Grids must floor-divide a ceil-padded capacity (``mp = -(-m // bm) * bm``)
+    or use ``pl.cdiv`` with in-kernel masking.
+  * autotune drift: `node_fused.AUTOTUNE` block sizes are analytic; each
+    entry's live tile set (4 [bm, bn] tiles: data in, two outs, plus
+    coefficient/carry slack) must fit the per-backend VMEM budget model, rows
+    must be sublane-aligned (8) and columns lane-aligned (128), and every
+    itemsize group must end with a ``None`` catch-all bound.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..framework import FileContext, Finding, Rule, Severity
+
+#: Live working set the budget models: 4 resident [bm, bn] tiles (input,
+#: two outputs, double-buffering slack). Conservative on purpose.
+_LIVE_TILES = 4
+
+#: Per-backend VMEM the live set may claim. TPU cores have ~16 MiB of VMEM;
+#: the table leaves most of it to Mosaic's own pipelining.
+VMEM_BUDGET_BYTES = {"tpu": 2 * 1024 * 1024}
+
+
+def _call_name(ctx: FileContext, node: ast.Call) -> str:
+    dotted = ctx.resolve(node.func)
+    return dotted.rsplit(".", 1)[-1] if dotted else ""
+
+
+def _keyword(node: ast.Call, name: str) -> ast.keyword | None:
+    for kw in node.keywords:
+        if kw.arg == name:
+            return kw
+    return None
+
+
+def _is_ceil_div(node: ast.AST) -> tuple[bool, str | None]:
+    """Matches ``-(-x // b)``; returns (True, divisor-name-if-Name)."""
+    if (isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub)
+            and isinstance(node.operand, ast.BinOp)
+            and isinstance(node.operand.op, ast.FloorDiv)
+            and isinstance(node.operand.left, ast.UnaryOp)
+            and isinstance(node.operand.left.op, ast.USub)):
+        div = node.operand.right
+        return True, div.id if isinstance(div, ast.Name) else None
+    return False, None
+
+
+def _is_ceil_mult(node: ast.AST) -> str | None:
+    """Matches ``-(-x // b) * b`` (a dim padded UP to a multiple of b);
+    returns the divisor name, or None."""
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mult):
+        for ceil, other in ((node.left, node.right), (node.right, node.left)):
+            ok, div = _is_ceil_div(ceil)
+            if ok and div is not None and isinstance(other, ast.Name) \
+                    and other.id == div:
+                return div
+    return None
+
+
+def _padded_names(fn: ast.AST) -> dict[str, str]:
+    """{var: divisor} for locals assigned a ceil-padded multiple."""
+    out: dict[str, str] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            div = _is_ceil_mult(node.value)
+            if div is not None:
+                out[node.targets[0].id] = div
+    return out
+
+
+def _local_tuples(fn: ast.AST) -> dict[str, ast.AST]:
+    """{var: tuple-literal} for locals like ``grid = (m // bm, n // bn)``."""
+    out: dict[str, ast.AST] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, (ast.Tuple, ast.List)):
+            out[node.targets[0].id] = node.value
+    return out
+
+
+class PallasKernelRule(Rule):
+    rule_id = "FIG004"
+    severity = Severity.ERROR
+    fix_hint = ("route interpret= through kernels/_platform.resolve_interpret "
+                "and pad dims to block multiples before grid division")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for fn in ast.walk(ctx.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._check_function(ctx, fn)
+        yield from self._check_autotune(ctx)
+
+    # -- per-function checks -------------------------------------------------
+
+    def _check_function(self, ctx, fn) -> Iterator[Finding]:
+        padded = _padded_names(fn)
+        tuples = _local_tuples(fn)
+        interpret_default = self._interpret_default(fn)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            if _call_name(ctx, node) == "pallas_call":
+                yield from self._check_pallas_call(ctx, node, padded, tuples)
+            if interpret_default == "none":
+                yield from self._check_forwarding(ctx, fn, node)
+
+    @staticmethod
+    def _interpret_default(fn) -> str | None:
+        a = fn.args
+        for params, defaults in ((a.kwonlyargs, a.kw_defaults),
+                                 (a.args, [None] * (len(a.args)
+                                                    - len(a.defaults))
+                                  + list(a.defaults))):
+            for p, d in zip(params, defaults):
+                if p.arg == "interpret" and isinstance(d, ast.Constant):
+                    return "none" if d.value is None else "bool"
+        return None
+
+    def _check_forwarding(self, ctx, fn, call: ast.Call) -> Iterator[Finding]:
+        """In a wrapper whose ``interpret`` defaults to None, forwarding the
+        raw parameter skips the platform resolution."""
+        callee = _call_name(ctx, call)
+        if callee == "resolve_interpret":
+            return
+        kw = _keyword(call, "interpret")
+        if kw is not None and isinstance(kw.value, ast.Name) \
+                and kw.value.id == "interpret":
+            yield self.finding(
+                ctx, call,
+                f"`{fn.name}` forwards its unresolved interpret=None "
+                f"parameter to `{callee or '<call>'}` — wrap it in "
+                f"kernels/_platform.resolve_interpret(interpret)")
+
+    def _check_pallas_call(self, ctx, node: ast.Call,
+                           padded: dict[str, str],
+                           tuples: dict[str, ast.AST]) -> Iterator[Finding]:
+        kw = _keyword(node, "interpret")
+        if kw is None:
+            yield self.finding(
+                ctx, node,
+                "pallas_call without interpret= — the platform policy "
+                "(compiled on TPU/GPU, interpreted on CPU) is silently "
+                "bypassed")
+        elif isinstance(kw.value, ast.Constant) and isinstance(kw.value.value,
+                                                               bool):
+            yield self.finding(
+                ctx, kw.value,
+                f"pallas_call with hardcoded interpret={kw.value.value} — "
+                f"the decision belongs to kernels/_platform."
+                f"resolve_interpret (tests override explicitly)")
+        grid_kw = _keyword(node, "grid")
+        if grid_kw is None:
+            return
+        grid = grid_kw.value
+        if isinstance(grid, ast.Name):  # grid = (...) assigned earlier
+            grid = tuples.get(grid.id, grid)
+        if isinstance(grid, (ast.Tuple, ast.List)):
+            for elt in grid.elts:
+                yield from self._check_grid_elt(ctx, elt, padded)
+
+    def _check_grid_elt(self, ctx, elt: ast.AST,
+                        padded: dict[str, str]) -> Iterator[Finding]:
+        """Flag ``X // b`` grid entries whose numerator is not ceil-padded
+        to a multiple of the same divisor. cdiv/ceil-div entries and plain
+        names (block counts computed elsewhere) pass."""
+        if not (isinstance(elt, ast.BinOp)
+                and isinstance(elt.op, ast.FloorDiv)):
+            return
+        ok, _ = _is_ceil_div(elt)  # a cdiv INSIDE the grid is fine
+        if ok:
+            return
+        num, div = elt.left, elt.right
+        div_name = div.id if isinstance(div, ast.Name) else None
+        if isinstance(num, ast.Name) and div_name is not None \
+                and padded.get(num.id) == div_name:
+            return
+        yield self.finding(
+            ctx, elt,
+            f"grid entry `{ast.unparse(elt)}` floor-divides a dim not "
+            f"proven padded to a multiple of the divisor — ragged tail "
+            f"blocks are silently dropped",
+            fix_hint="pad the dim first (`mp = -(-m // bm) * bm`; grid "
+                     "`mp // bm`) or use pl.cdiv with in-kernel masking")
+
+    # -- AUTOTUNE table budget ----------------------------------------------
+
+    def _check_autotune(self, ctx) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, (ast.Assign, ast.AnnAssign))):
+                continue
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            if not any(isinstance(t, ast.Name) and t.id == "AUTOTUNE"
+                       for t in targets):
+                continue
+            value = node.value
+            if not isinstance(value, ast.Dict):
+                continue
+            yield from self._check_autotune_dict(ctx, value)
+
+    def _check_autotune_dict(self, ctx, table: ast.Dict) -> Iterator[Finding]:
+        budget = VMEM_BUDGET_BYTES["tpu"]
+        last_bound: dict[int, object] = {}
+        for key, val in zip(table.keys, table.values):
+            entry = self._literal_entry(key, val)
+            if entry is None:
+                continue
+            itemsize, bound, bm, bn = entry
+            last_bound[itemsize] = bound
+            where = f"AUTOTUNE[({itemsize}, {bound})]"
+            if bn % 128 != 0:
+                yield self.finding(
+                    ctx, key,
+                    f"{where}: block_cols={bn} is not lane-aligned "
+                    f"(multiple of 128)")
+            if bm % 8 != 0:
+                yield self.finding(
+                    ctx, key,
+                    f"{where}: block_rows={bm} is not sublane-aligned "
+                    f"(multiple of 8)")
+            live = _LIVE_TILES * bm * bn * itemsize
+            if live > budget:
+                yield self.finding(
+                    ctx, key,
+                    f"{where}: blocks ({bm}, {bn}) put {live // 1024} KiB "
+                    f"live in VMEM — past the {budget // 1024} KiB tpu "
+                    f"budget model ({_LIVE_TILES} resident tiles)",
+                    fix_hint="shrink block_rows/block_cols so "
+                             f"{_LIVE_TILES}*bm*bn*itemsize fits the budget")
+        for itemsize, bound in sorted(last_bound.items()):
+            if bound is not None:
+                yield self.finding(
+                    ctx, table,
+                    f"AUTOTUNE itemsize {itemsize} does not end with a None "
+                    f"(catch-all) width bound — wide nodes would fall "
+                    f"through the table")
+
+    @staticmethod
+    def _literal_entry(key, val):
+        if not (isinstance(key, ast.Tuple) and len(key.elts) == 2
+                and isinstance(val, ast.Tuple) and len(val.elts) == 2):
+            return None
+        elts = [e.value if isinstance(e, ast.Constant) else None
+                for e in list(key.elts) + list(val.elts)]
+        itemsize, bound, bm, bn = elts
+        if not isinstance(itemsize, int) or not isinstance(bm, int) \
+                or not isinstance(bn, int):
+            return None
+        if bound is not None and not isinstance(bound, int):
+            return None
+        return itemsize, bound, bm, bn

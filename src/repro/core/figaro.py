@@ -287,4 +287,6 @@ def figaro_r0_fn(plan: FigaroPlan, *, dtype=jnp.float32,
         return figaro_r0(plan, data, dtype=dtype, use_kernel=use_kernel,
                          assembly=assembly)
 
-    return jax.jit(fn)
+    # Deliberately plan-closed: kept for the pre-engine call sites and
+    # dispatch-minimal benchmarks (see docstring).
+    return jax.jit(fn)  # figaro-lint: disable=FIG002 -- plan-closed by design

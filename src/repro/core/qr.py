@@ -87,7 +87,9 @@ def figaro_qr_fn(plan: FigaroPlan, *, dtype=jnp.float32,
         return postprocess_r0(r0, method=method, leaf_rows=leaf_rows,
                               use_kernel=use_kernel)
 
-    return jax.jit(fn)
+    # Deliberately plan-closed: this factory exists for dispatch-minimal
+    # wall-clock benchmarks; plan-generic dispatch lives in FigaroEngine.
+    return jax.jit(fn)  # figaro-lint: disable=FIG002 -- plan-closed by design
 
 
 def materialized_qr(tree: JoinTree, *, dtype=jnp.float64,

@@ -3,7 +3,8 @@
 This is the kernel the §Perf blockwise accounting models: one HBM pass over
 Q/K/V with the [Tq, Tk] score matrix never materialized — scores live in a
 VMEM tile, the softmax is the online (running max / running sum) form, and
-the output accumulates in f32.
+the output accumulates in the dtype derived from the inputs (f64 for f64
+inputs, f32 otherwise).
 
 TPU mapping:
   grid = (batch*heads, q_blocks, kv_blocks) with the KV dimension innermost,
@@ -38,7 +39,8 @@ NEG_INF = -1e30
 
 def _flash_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, out_ref,
                   m_ref, l_ref, acc_ref, *, causal: bool,
-                  window: int | None, scale: float, num_kv_blocks: int):
+                  window: int | None, scale: float, num_kv_blocks: int,
+                  acc_dtype):
     kv_i = pl.program_id(2)  # innermost: sequential online-softmax carry
 
     @pl.when(kv_i == 0)
@@ -47,14 +49,14 @@ def _flash_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, out_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)            # [bq, hd]
-    k = k_ref[0].astype(jnp.float32)            # [bk, hd]
-    v = v_ref[0].astype(jnp.float32)            # [bk, hd]
+    q = q_ref[0].astype(acc_dtype)              # [bq, hd]
+    k = k_ref[0].astype(acc_dtype)              # [bk, hd]
+    v = v_ref[0].astype(acc_dtype)              # [bk, hd]
     qp = qpos_ref[0]                            # [bq] int32
     kp = kpos_ref[0]                            # [bk] int32
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
+                            preferred_element_type=acc_dtype) * scale
     ok = (kp[None, :] >= 0)
     if causal:
         ok &= kp[None, :] <= qp[:, None]
@@ -68,7 +70,7 @@ def _flash_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, out_ref,
     corr = jnp.exp(m_prev - m_new)              # [bq, 1]
     l_new = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
     acc_new = acc_ref[...] * corr + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=acc_dtype)
     m_ref[...] = m_new
     l_ref[...] = l_new
     acc_ref[...] = acc_new
@@ -88,6 +90,7 @@ def flash_attention_kernel(q, k, v, q_pos, k_pos, *, causal: bool,
     """
     h, tq, hd = q.shape
     tk = k.shape[1]
+    acc_dtype = jnp.float64 if q.dtype == jnp.float64 else jnp.float32
     scale = 1.0 / (hd ** 0.5)
     nq = -(-tq // block_q)
     nk = -(-tk // block_kv)
@@ -103,7 +106,8 @@ def flash_attention_kernel(q, k, v, q_pos, k_pos, *, causal: bool,
 
     grid = (h, nq, nk)
     kern = functools.partial(_flash_kernel, causal=causal, window=window,
-                             scale=scale, num_kv_blocks=nk)
+                             scale=scale, num_kv_blocks=nk,
+                             acc_dtype=acc_dtype)
     out = pl.pallas_call(
         kern,
         grid=grid,
@@ -117,9 +121,9 @@ def flash_attention_kernel(q, k, v, q_pos, k_pos, *, causal: bool,
         out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((h, nq * block_q, hd), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
-            pltpu.VMEM((block_q, 1), jnp.float32),   # running sum l
-            pltpu.VMEM((block_q, hd), jnp.float32),  # output accumulator
+            pltpu.VMEM((block_q, 1), acc_dtype),   # running max m
+            pltpu.VMEM((block_q, 1), acc_dtype),   # running sum l
+            pltpu.VMEM((block_q, hd), acc_dtype),  # output accumulator
         ],
         interpret=interpret,
     )(q_pos, k_pos, q, k, v)

@@ -9,8 +9,9 @@ def flash_attention_ref(q, k, v, q_pos, k_pos, *, causal: bool,
                         window: int | None):
     """q: [H, Tq, hd], k/v: [H, Tk, hd]; positions [H, Tq] / [H, Tk]."""
     hd = q.shape[-1]
-    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
-                   k.astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)
+    acc_dtype = jnp.float64 if q.dtype == jnp.float64 else jnp.float32
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(acc_dtype),
+                   k.astype(acc_dtype)) / jnp.sqrt(hd).astype(acc_dtype)
     ok = k_pos[:, None, :] >= 0
     if causal:
         ok &= k_pos[:, None, :] <= q_pos[:, :, None]
@@ -19,4 +20,4 @@ def flash_attention_ref(q, k, v, q_pos, k_pos, *, causal: bool,
     s = jnp.where(ok, s, -jnp.inf)
     w = jnp.exp(s - s.max(axis=-1, keepdims=True))
     w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-30)
-    return jnp.einsum("hqk,hkd->hqd", w, v.astype(jnp.float32)).astype(q.dtype)
+    return jnp.einsum("hqk,hkd->hqd", w, v.astype(acc_dtype)).astype(q.dtype)

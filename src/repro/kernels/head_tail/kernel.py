@@ -10,8 +10,8 @@ sequences of Lemma 3.5, fused with their scaling.
 TPU mapping: grid = (col_blocks, row_blocks) with the row dimension innermost,
 so each column stripe walks rows sequentially carrying the running segment
 prefix in VMEM scratch; within a block the segmented scan is a Hillis–Steele
-ladder (log₂ bm vector steps) on the VPU. The scan accumulates in f32
-regardless of the I/O dtype.
+ladder (log₂ bm vector steps) on the VPU. The scan accumulates in the dtype
+derived from the inputs (f64 for f64 data, f32 otherwise).
 """
 
 from __future__ import annotations
@@ -34,15 +34,15 @@ def _shift_down(x: jnp.ndarray, off: int) -> jnp.ndarray:
 
 
 def _segtail_kernel(data_ref, wa_ref, first_ref, ca_ref, cb_ref, out_ref,
-                    carry_ref, *, block_rows: int):
+                    carry_ref, *, block_rows: int, acc_dtype):
     i = pl.program_id(1)  # row block (innermost => sequential carry is valid)
 
     @pl.when(i == 0)
     def _init():
         carry_ref[...] = jnp.zeros_like(carry_ref)
 
-    wa = wa_ref[...].astype(jnp.float32)        # [bm, bn]
-    first = first_ref[...].astype(jnp.float32)  # [bm, 1]; 1.0 at segment starts
+    wa = wa_ref[...].astype(acc_dtype)          # [bm, bn]
+    first = first_ref[...].astype(acc_dtype)    # [bm, 1]; 1.0 at segment starts
 
     # Segmented inclusive Hillis–Steele scan within the block:
     #   (f_a, x_a) ⊕ (f_b, x_b) = (f_a|f_b, x_b + (f_b ? 0 : x_a))
@@ -58,8 +58,8 @@ def _segtail_kernel(data_ref, wa_ref, first_ref, ca_ref, cb_ref, out_ref,
     excl = incl - wa
     carry_ref[...] = incl[block_rows - 1:block_rows, :]
 
-    out = (ca_ref[...].astype(jnp.float32) * data_ref[...].astype(jnp.float32)
-           + cb_ref[...].astype(jnp.float32) * excl)
+    out = (ca_ref[...].astype(acc_dtype) * data_ref[...].astype(acc_dtype)
+           + cb_ref[...].astype(acc_dtype) * excl)
     out_ref[...] = out.astype(out_ref.dtype)
 
 
@@ -77,6 +77,7 @@ def segmented_tail_kernel(
     interpret: bool = False,
 ) -> jnp.ndarray:
     m, n = data.shape
+    acc_dtype = jnp.float64 if data.dtype == jnp.float64 else jnp.float32
     bm = min(block_rows, max(8, m))
     bn = min(block_cols, max(128, n))
     # Pad rows to the block grid; padded rows start their own (discarded)
@@ -94,12 +95,13 @@ def segmented_tail_kernel(
     row_spec = pl.BlockSpec((bm, bn), lambda j, i: (i, j))
     vec_spec = pl.BlockSpec((bm, 1), lambda j, i: (i, 0))
     out = pl.pallas_call(
-        functools.partial(_segtail_kernel, block_rows=bm),
+        functools.partial(_segtail_kernel, block_rows=bm,
+                          acc_dtype=acc_dtype),
         grid=grid,
         in_specs=[row_spec, row_spec, vec_spec, vec_spec, vec_spec],
         out_specs=row_spec,
         out_shape=jax.ShapeDtypeStruct((mp, np_), data.dtype),
-        scratch_shapes=[pltpu.VMEM((1, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((1, bn), acc_dtype)],
         interpret=interpret,
     )(data, wa, first, coef_a, coef_b)
     return out[:m, :n]

@@ -1,0 +1,458 @@
+"""figaro-lint: every rule fires on its known-bad fixture and stays quiet on
+the fixed tree; suppressions, the unused report, and the committed baseline
+stay exact."""
+
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (Baseline, analyze_paths, analyze_source,
+                            load_baseline, unused_report)
+from repro.analysis.baseline import empty_baseline, write_baseline
+from repro.analysis.rules import all_rules
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _findings(source, path="src/repro/core/fixture.py"):
+    return analyze_source(textwrap.dedent(source), path, all_rules())
+
+
+def _rules_fired(source, path="src/repro/core/fixture.py"):
+    return {f.rule for f in _findings(source, path)}
+
+
+# -- FIG001 compat pin -------------------------------------------------------
+
+FIG001_BAD = """
+    from jax.sharding import AxisType, PartitionSpec
+    from jax.experimental.shard_map import shard_map
+    import jax
+
+    def mesh(devices):
+        return jax.make_mesh((len(devices),), ("data",))
+"""
+
+FIG001_GOOD = """
+    from jax.sharding import PartitionSpec
+    from repro.compat import AxisType, make_mesh, shard_map
+
+    def mesh(devices):
+        return make_mesh((len(devices),), ("data",))
+"""
+
+
+def test_fig001_fires_on_direct_imports():
+    findings = [f for f in _findings(FIG001_BAD) if f.rule == "FIG001"]
+    msgs = "\n".join(f.message for f in findings)
+    assert "AxisType" in msgs
+    assert "shard_map" in msgs
+    assert "jax.make_mesh" in msgs
+    # PartitionSpec is version-stable: not flagged.
+    assert "PartitionSpec" not in msgs
+
+
+def test_fig001_quiet_on_compat_routed():
+    assert "FIG001" not in _rules_fired(FIG001_GOOD)
+
+
+def test_fig001_exempts_the_shim_itself():
+    assert "FIG001" not in _rules_fired(FIG001_BAD,
+                                        path="src/repro/compat.py")
+
+
+# -- FIG002 retrace hazards --------------------------------------------------
+
+FIG002_STATIC_DRIFT = """
+    import functools
+    import jax
+
+    class Engine:
+        _STATIC = {
+            "qr": ("dtype", "use_kernel", "method"),
+            "svd": ("dtype",),
+        }
+
+        def _qr_impl(self, plan, data, *, dtype, use_kernel):
+            return data
+
+        def _svd_impl(self, plan, data, *, dtype, rank):
+            return data
+"""
+
+FIG002_STATIC_GOOD = """
+    class Engine:
+        _STATIC = {
+            "qr": ("dtype", "use_kernel"),
+            "svd": ("dtype", "rank"),
+        }
+
+        def _qr_impl(self, plan, data, *, dtype, use_kernel):
+            return data
+
+        def _svd_impl(self, plan, data, *, dtype, rank):
+            return data
+"""
+
+FIG002_PLAN_CLOSURE = """
+    import jax
+
+    def make_fn(plan, dtype):
+        def fn(data):
+            return run(plan, data, dtype)
+        return jax.jit(fn)
+"""
+
+FIG002_PLAN_ARG = """
+    import jax
+
+    def make_fn(dtype):
+        def fn(plan, data):
+            return run(plan, data, dtype)
+        return jax.jit(fn)
+"""
+
+FIG002_BAD_STATIC_NAMES = """
+    import functools
+    import jax
+
+    @functools.partial(jax.jit, static_argnames=("dtype", "methodd"))
+    def solve(data, *, dtype, method=None):
+        return data
+"""
+
+FIG002_UNHASHABLE = """
+    import functools
+    import jax
+
+    @functools.partial(jax.jit, static_argnames=("opts",))
+    def solve(data, *, opts=[]):
+        return data
+"""
+
+
+def test_fig002_static_table_drift():
+    msgs = [f.message for f in _findings(FIG002_STATIC_DRIFT)
+            if f.rule == "FIG002"]
+    joined = "\n".join(msgs)
+    assert "'method'" in joined and "does not accept" in joined
+    assert "'rank'" in joined and "missing impl keyword" in joined
+
+
+def test_fig002_static_table_in_sync_is_quiet():
+    assert "FIG002" not in _rules_fired(FIG002_STATIC_GOOD)
+
+
+def test_fig002_plan_closure():
+    msgs = [f.message for f in _findings(FIG002_PLAN_CLOSURE)
+            if f.rule == "FIG002"]
+    assert any("captures plan value" in m for m in msgs)
+
+
+def test_fig002_plan_as_argument_is_quiet():
+    assert "FIG002" not in _rules_fired(FIG002_PLAN_ARG)
+
+
+def test_fig002_unknown_static_name():
+    msgs = [f.message for f in _findings(FIG002_BAD_STATIC_NAMES)
+            if f.rule == "FIG002"]
+    assert any("methodd" in m for m in msgs)
+
+
+def test_fig002_unhashable_static_default():
+    msgs = [f.message for f in _findings(FIG002_UNHASHABLE)
+            if f.rule == "FIG002"]
+    assert any("unhashable" in m for m in msgs)
+
+
+# -- FIG003 dtype drift ------------------------------------------------------
+
+FIG003_BAD = """
+    import jax.numpy as jnp
+
+    def scan(x):
+        acc = x.astype(jnp.float32)
+        return acc.sum()
+"""
+
+FIG003_GOOD = """
+    import jax.numpy as jnp
+
+    def scan(x, *, dtype=jnp.float32):
+        acc_dtype = jnp.float64 if x.dtype == jnp.float64 else jnp.float32
+        acc = x.astype(acc_dtype)
+        return acc.sum()
+"""
+
+
+def test_fig003_fires_on_hardcoded_narrowing():
+    assert "FIG003" in _rules_fired(FIG003_BAD,
+                                    path="src/repro/kernels/fix.py")
+
+
+def test_fig003_quiet_on_accumulator_idiom_and_defaults():
+    assert "FIG003" not in _rules_fired(FIG003_GOOD,
+                                        path="src/repro/kernels/fix.py")
+
+
+def test_fig003_out_of_scope_paths_ignored():
+    # The policy covers core/ and kernels/; models/ may pick working dtypes.
+    assert "FIG003" not in _rules_fired(FIG003_BAD,
+                                        path="src/repro/models/fix.py")
+
+
+def test_fig003_counts_file_rejects_even_the_idiom():
+    fired = _findings(FIG003_GOOD, path="src/repro/core/counts.py")
+    msgs = [f.message for f in fired if f.rule == "FIG003"]
+    assert any("float64" in m and "2^24" in m for m in msgs)
+
+
+# -- FIG004 pallas kernel sites ----------------------------------------------
+
+FIG004_BAD = """
+    import jax
+    from jax.experimental import pallas as pl
+
+    def launch(x, bm, bn):
+        m, n = x.shape
+        grid = (m // bm, n // bn)
+        return pl.pallas_call(kernel, grid=grid,
+                              out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+                              )(x)
+"""
+
+FIG004_GOOD = """
+    import jax
+    from jax.experimental import pallas as pl
+    from repro.kernels._platform import resolve_interpret
+
+    def launch(x, bm, bn, *, interpret=None):
+        m, n = x.shape
+        mp = -(-m // bm) * bm
+        np_ = -(-n // bn) * bn
+        grid = (mp // bm, np_ // bn)
+        return pl.pallas_call(kernel, grid=grid,
+                              out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+                              interpret=resolve_interpret(interpret),
+                              )(x)
+"""
+
+FIG004_FORWARD = """
+    def launch(x, *, interpret=None):
+        return inner(x, interpret=interpret)
+"""
+
+FIG004_AUTOTUNE_BAD = """
+    AUTOTUNE = {
+        (4, 128): (512, 200),
+        (4, None): (4096, 4096),
+        (8, 512): (132, 256),
+    }
+"""
+
+FIG004_AUTOTUNE_GOOD = """
+    AUTOTUNE = {
+        (4, 128): (512, 128),
+        (4, None): (128, 512),
+        (8, 512): (128, 256),
+        (8, None): (64, 512),
+    }
+"""
+
+
+def test_fig004_missing_interpret_and_unpadded_grid():
+    msgs = [f.message for f in _findings(FIG004_BAD) if f.rule == "FIG004"]
+    joined = "\n".join(msgs)
+    assert "without interpret=" in joined
+    assert "floor-divides" in joined
+
+
+def test_fig004_resolved_interpret_and_padded_grid_quiet():
+    assert "FIG004" not in _rules_fired(FIG004_GOOD)
+
+
+def test_fig004_raw_interpret_forwarding():
+    msgs = [f.message for f in _findings(FIG004_FORWARD)
+            if f.rule == "FIG004"]
+    assert any("forwards its unresolved interpret" in m for m in msgs)
+
+
+def test_fig004_autotune_budget_alignment_catchall():
+    msgs = [f.message for f in _findings(FIG004_AUTOTUNE_BAD)
+            if f.rule == "FIG004"]
+    joined = "\n".join(msgs)
+    assert "lane-aligned" in joined        # (512, 200)
+    assert "VMEM" in joined                # (4096, 4096) busts the budget
+    assert "sublane-aligned" in joined     # (132, 256)
+    assert "catch-all" in joined           # itemsize 8 has no None bound
+
+
+def test_fig004_autotune_good_table_quiet():
+    assert "FIG004" not in _rules_fired(FIG004_AUTOTUNE_GOOD)
+
+
+# -- FIG005 lock discipline --------------------------------------------------
+
+FIG005_BAD = """
+    import threading
+
+    class Server:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.count = 0
+
+        def bump(self):
+            self.count += 1
+"""
+
+FIG005_GOOD = """
+    import threading
+
+    class Server:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.count = 0
+
+        def bump(self):
+            with self._lock:
+                self.count += 1
+
+        def read(self):
+            return self.count
+"""
+
+FIG005_NO_LOCKS = """
+    class Plain:
+        def __init__(self):
+            self.count = 0
+
+        def bump(self):
+            self.count += 1
+"""
+
+
+def test_fig005_unlocked_write_fires():
+    msgs = [f.message for f in _findings(FIG005_BAD) if f.rule == "FIG005"]
+    assert any("Server.bump" in m and "self.count" in m for m in msgs)
+
+
+def test_fig005_locked_write_and_reads_quiet():
+    assert "FIG005" not in _rules_fired(FIG005_GOOD)
+
+
+def test_fig005_lockless_classes_exempt():
+    assert "FIG005" not in _rules_fired(FIG005_NO_LOCKS)
+
+
+# -- suppressions ------------------------------------------------------------
+
+def test_line_suppression_silences_only_that_line():
+    src = """
+    import jax.numpy as jnp
+
+    def f(x):
+        a = x.astype(jnp.float32)  # figaro-lint: disable=FIG003 -- test
+        b = x.astype(jnp.float32)
+        return a + b
+    """
+    findings = _findings(src, path="src/repro/core/fix.py")
+    lines = [f.line for f in findings if f.rule == "FIG003"]
+    assert len(lines) == 1  # only the unsuppressed write remains
+
+
+def test_file_suppression_silences_the_module():
+    src = """
+    # figaro-lint: disable-file=FIG003 -- fixture corpus
+    import jax.numpy as jnp
+
+    def f(x):
+        return x.astype(jnp.float32)
+    """
+    assert "FIG003" not in _rules_fired(src, path="src/repro/core/fix.py")
+
+
+def test_suppression_in_string_literal_is_inert():
+    src = '''
+    import jax.numpy as jnp
+
+    NOTE = "# figaro-lint: disable-file=FIG003 -- not a comment"
+
+    def f(x):
+        return x.astype(jnp.float32)
+    '''
+    assert "FIG003" in _rules_fired(src, path="src/repro/core/fix.py")
+
+
+def test_syntax_error_surfaces_as_fig000():
+    findings = _findings("def broken(:\n    pass\n")
+    assert [f.rule for f in findings] == ["FIG000"]
+
+
+# -- baseline ----------------------------------------------------------------
+
+def test_baseline_roundtrip_and_staleness(tmp_path):
+    findings = _findings(FIG003_BAD, path="src/repro/kernels/fix.py")
+    assert findings
+    path = tmp_path / "baseline.json"
+    write_baseline(str(path), findings)
+    baseline = load_baseline(str(path))
+    new, baselined = baseline.split(findings)
+    assert not new and len(baselined) == len(findings)
+    assert baseline.stale(findings) == []
+    # After the violation is fixed the entry goes stale.
+    assert baseline.stale([]) == [f.fingerprint() for f in findings]
+
+
+def test_empty_baseline_covers_nothing():
+    findings = _findings(FIG003_BAD, path="src/repro/kernels/fix.py")
+    new, baselined = empty_baseline().split(findings)
+    assert new == findings and baselined == []
+
+
+# -- the real tree -----------------------------------------------------------
+
+def test_repo_matches_committed_baseline_exactly():
+    """The committed analysis_baseline.json is exact: no un-baselined
+    findings in src/, and no stale entries (fixed violations must drop out
+    of the baseline)."""
+    findings = analyze_paths([str(REPO / "src")], root=str(REPO))
+    baseline = load_baseline(str(REPO / "analysis_baseline.json"))
+    new, _ = baseline.split(findings)
+    assert new == [], "non-baselined findings:\n" + \
+        "\n".join(f.render() for f in new)
+    assert baseline.stale(findings) == []
+
+
+def test_repo_import_graph_has_no_orphans():
+    report = unused_report(src_root=str(REPO / "src"))
+    assert report["orphans"] == [], (
+        "dead modules (unreachable and unreferenced): "
+        f"{report['orphans']}")
+    # The quarantined seed scaffolding stays listed, not silently dropped.
+    for mod, info in report["modules"].items():
+        if info["class"] == "external-only":
+            assert info["referenced_by"], mod
+
+
+def test_unused_report_on_synthetic_package(tmp_path):
+    src = tmp_path / "src"
+    pkg = src / "repro"
+    pkg.mkdir(parents=True)
+    (pkg / "__init__.py").write_text("")
+    (pkg / "figaro.py").write_text("from repro import used\n")
+    (pkg / "used.py").write_text("X = 1\n")
+    (pkg / "dead.py").write_text("Y = 2\n")
+    (pkg / "tested.py").write_text("Z = 3\n")
+    tests = tmp_path / "tests"
+    tests.mkdir()
+    (tests / "test_t.py").write_text("import repro.tested\n")
+    report = unused_report(src_root=str(src),
+                           external_dirs=[str(tests)],
+                           roots=["repro.figaro"])
+    classes = {m: i["class"] for m, i in report["modules"].items()}
+    assert classes["repro.used"] == "facade"
+    assert classes["repro.tested"] == "external-only"
+    assert classes["repro.dead"] == "orphan"
+    assert report["orphans"] == ["repro.dead"]
