@@ -391,6 +391,51 @@ def run(csv: Csv, *, fast: bool = False) -> None:
         f"figaro-lint full-repo pass took {t_lint:.2f}s (>= 10s budget) — "
         f"a rule likely went quadratic")
 
+    # -- figaro-san overhead: disabled mode must cost (nearly) nothing ------
+    # The runtime sanitizer's disabled contract is physical: the race hooks
+    # are removed from the instrumented classes and the engine pays one
+    # STATE flag read per dispatch. Measured on the hot (fully cached)
+    # dispatch path, interleaved with enable/disable cycles so a leaked
+    # __getattribute__ hook after disable() — the real regression mode —
+    # shows up as a disabled-mode slowdown. Enabled-mode overhead (hooks +
+    # lockset bookkeeping; float64 requests, so no shadow dispatch) is
+    # reported, not bounded: it is diagnostic tooling, not the serving path.
+    from repro import sanitizer as figaro_san
+
+    san_engine = FigaroEngine(donate_data=False)
+    san_plan = build_plan(yelp_like(scale=20, cols=2))
+    hot = lambda: san_engine.qr(san_plan, dtype=jnp.float64)
+    block(hot())  # compile once; every timed call below is a cache hit
+    t_base = timeit(hot)
+    n_reps = 25
+    t_off, t_on = [], []
+    for _ in range(n_reps):
+        t0 = time.perf_counter()
+        block(hot())
+        t_off.append(time.perf_counter() - t0)
+        figaro_san.enable(sample_every=10 ** 9)
+        try:
+            t0 = time.perf_counter()
+            block(hot())
+            t_on.append(time.perf_counter() - t0)
+        finally:
+            figaro_san.disable()
+    figaro_san.reset()
+    t_disabled, t_enabled = min(t_off), min(t_on)
+    case = "sanitizer_overhead"
+    add(case, "baseline_s", t_base)
+    add(case, "disabled_s", t_disabled)
+    add(case, "enabled_s", t_enabled)
+    add(case, "disabled_overhead_frac", t_disabled / t_base - 1.0)
+    add(case, "enabled_overhead_frac", t_enabled / t_base - 1.0)
+    # 2% relative plus a 1 ms absolute allowance, same rationale as the
+    # api_overhead bound: the guarded failure (hooks surviving disable())
+    # costs far more than jitter at these sizes.
+    assert t_disabled < 1.02 * t_base + 1e-3, (
+        f"sanitizer disabled-mode dispatch {t_disabled:.6f}s exceeds "
+        f"baseline {t_base:.6f}s by more than 2% + 1ms — are the race "
+        f"hooks being uninstalled?")
+
     write_bench_json("engine", rows)
 
 

@@ -204,7 +204,11 @@ print("OK — Session(use_kernel=, assembly=) select the accelerated paths.")
 # dtypes from inputs instead of hardcoding float32 (FIG003); every
 # pallas_call routes interpret= through kernels/_platform.resolve_interpret
 # and grids divide ceil-padded dims (FIG004 — step 8's kernels); the async
-# server's shared state is written under its locks (FIG005 — step 7).
+# server's shared state is written under its locks (FIG005 — step 7), read
+# under them too (FIG006 — unlocked reads of shared mutable attrs are
+# cross-thread escapes), and every thread/lock in src/ is constructed
+# through the figaro-san wrappers so the runtime sanitizer of step 10 can
+# observe it (FIG007).
 #
 # The analyzer is pure stdlib (no jax import), so CI runs it uninstalled:
 #
@@ -224,3 +228,51 @@ print("OK — Session(use_kernel=, assembly=) select the accelerated paths.")
 # rules/__init__.all_rules, and give it known-bad/known-good fixtures in
 # tests/test_analysis.py.
 print("OK — see `python -m repro.analysis --help` for the linter surface.")
+
+# --- 10. figaro-san: the runtime counterpart, FIGARO_SAN=1 ------------------
+# figaro-lint checks what the source says; figaro-san checks what the
+# process does. `FIGARO_SAN=1 python ...` (or `sanitizer.enable()`) arms
+# three detectors with near-zero cost when off (the instrumentation hooks
+# are physically removed from the classes on disable()):
+#
+#   race     lockset detection on the @shared_state classes (engine caches,
+#            PlanHolder counters, server queues) + a lock-order graph that
+#            flags acquisition cycles (potential deadlocks) without needing
+#            the unlucky interleaving to actually hang;
+#   retrace  every engine compile records its dispatch signature; after
+#            `sanitizer.expect_no_retrace()` any further compile is a
+#            finding naming the diverged signature component;
+#   numerics sampled float64 shadow dispatches assert the f32 error against
+#            the paper's database-size budget (eps * slack * Σ relation
+#            rows — FiGaRo's rounding error scales with DATABASE size, not
+#            join size), plus NaN/Inf tripwires on every sampled output.
+from repro import sanitizer
+
+sanitizer.enable()
+np.asarray(ds.qr())  # the serving path from the steps above, sanitized
+assert sanitizer.findings() == []  # nothing to report on the real stack
+
+# A detector firing looks like this — the classic AB/BA lock inversion:
+from repro.sanitizer.locks import san_lock
+
+a, b = san_lock("demo.A"), san_lock("demo.B")
+with a:
+    with b:
+        pass
+with b:
+    with a:  # reversed order: a cycle in the acquisition graph
+        pass
+(cycle_finding,) = sanitizer.findings("lock-order")
+print("figaro-san          :", cycle_finding.message)
+print(sanitizer.report().splitlines()[0])
+sanitizer.reset()
+sanitizer.disable()
+
+# Adding a runtime check mirrors adding a lint rule (step 9): drop a module
+# in src/repro/sanitizer/ that calls `_state.STATE.add_finding(check, msg,
+# details=..., dedupe_key=...)` from its instrumentation points, wire its
+# enable/reset into sanitizer.enable()/reset(), and give it a fires-on-bad /
+# quiet-on-good pair in tests/test_sanitizer.py. CI runs the async serving
+# suite and a multi-threaded stress test under FIGARO_SAN=1 asserting zero
+# findings, so a new detector immediately guards the real serving stack.
+print("OK — FIGARO_SAN=1 arms the race/retrace/numerics sanitizers.")

@@ -59,9 +59,13 @@ class Finding:
                 "message": self.message, "fix_hint": self.fix_hint}
 
     def render(self) -> str:
-        hint = f"  [fix: {self.fix_hint}]" if self.fix_hint else ""
-        return (f"{self.path}:{self.line}: {self.rule} {self.severity}: "
-                f"{self.message}{hint}")
+        """Human-readable form, fix hint included on its own indented line —
+        the hint must reach terminal users, not just the `--json` payload."""
+        head = (f"{self.path}:{self.line}: {self.rule} {self.severity}: "
+                f"{self.message}")
+        if not self.fix_hint:
+            return head
+        return f"{head}\n    fix: {self.fix_hint}"
 
 
 _SUPPRESS_RE = re.compile(
@@ -200,9 +204,15 @@ def analyze_source(source: str, path: str,
     try:
         tree = ast.parse(source, filename=path)
     except SyntaxError as e:
-        return [Finding(rule="FIG000", severity=Severity.ERROR, path=path,
-                        line=e.lineno or 1,
-                        message=f"syntax error: {e.msg}")]
+        return [Finding(
+            rule="FIG000", severity=Severity.ERROR, path=path,
+            line=e.lineno or 1,
+            message=(f"syntax error: {e.msg} — figaro-lint cannot analyze "
+                     f"this file (suppressions use `# figaro-lint: "
+                     f"disable=FIGxxx -- reason` once it parses)"),
+            fix_hint=("fix the parse error first; FIG000 itself cannot be "
+                      "suppressed because suppression comments are read "
+                      "from the parsed file"))]
     ctx = FileContext(path, source, tree)
     sup = _parse_suppressions(source)
     out, seen = [], set()
@@ -239,7 +249,9 @@ def analyze_paths(paths: Iterable[str], *, rules: Iterable[Rule] | None = None,
             findings.append(Finding(
                 rule="FIG000", severity=Severity.ERROR,
                 path=_relpath(fpath, root), line=1,
-                message=f"unreadable file: {e}"))
+                message=f"unreadable file: {e}",
+                fix_hint="fix the file's encoding/permissions or remove it "
+                         "from the analyzed paths"))
             continue
         findings.extend(analyze_source(source, _relpath(fpath, root), rules))
     findings.sort(key=lambda f: (f.path, f.line, f.rule))

@@ -8,12 +8,16 @@ from .dtype_drift import DtypeDriftRule
 from .lock_discipline import LockDisciplineRule
 from .pallas_kernel import PallasKernelRule
 from .retrace import RetraceHazardRule
+from .san_routing import SanRoutingRule
+from .thread_escape import ThreadEscapeRule
 
 __all__ = ["all_rules", "CompatPinRule", "RetraceHazardRule",
-           "DtypeDriftRule", "PallasKernelRule", "LockDisciplineRule"]
+           "DtypeDriftRule", "PallasKernelRule", "LockDisciplineRule",
+           "ThreadEscapeRule", "SanRoutingRule"]
 
 
 def all_rules() -> list[Rule]:
     """Fresh rule instances (rules may keep per-run state)."""
     return [CompatPinRule(), RetraceHazardRule(), DtypeDriftRule(),
-            PallasKernelRule(), LockDisciplineRule()]
+            PallasKernelRule(), LockDisciplineRule(), ThreadEscapeRule(),
+            SanRoutingRule()]

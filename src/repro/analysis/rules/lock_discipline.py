@@ -23,7 +23,11 @@ from typing import Iterator
 
 from ..framework import FileContext, Finding, Rule, Severity
 
-_LOCK_FACTORIES = frozenset({"Lock", "RLock", "Condition"})
+#: Raw threading factories plus the sanitizer-aware wrappers
+#: (`repro.sanitizer.locks`) that FIG007 requires src/ code to use — a class
+#: is lock-disciplined whichever spelling it constructs its locks with.
+_LOCK_FACTORIES = frozenset({"Lock", "RLock", "Condition",
+                             "san_lock", "san_rlock", "san_condition"})
 _EXEMPT_METHODS = frozenset({"__init__", "__new__", "__init_subclass__"})
 
 

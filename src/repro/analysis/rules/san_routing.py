@@ -1,0 +1,62 @@
+"""FIG007 — src/ threads and locks must route through figaro-san wrappers.
+
+The runtime sanitizer can only observe what goes through its wrappers: a
+raw ``threading.Lock()`` in the serving stack is invisible to the lock-order
+graph and the lockset race detector, so one forgotten conversion silently
+blinds FIGARO_SAN on exactly the code most likely to race. This rule pins
+the routing: every ``threading.Thread`` / ``Lock`` / ``RLock`` /
+``Condition`` **call** in ``src/repro`` must be the sanitizer-aware
+equivalent (`repro.sanitizer.locks.san_lock` / ``san_rlock`` /
+``san_condition``, `repro.sanitizer.threads.san_thread`).
+
+Scope is ``src/repro`` only, excluding ``repro/sanitizer`` itself (the
+wrappers are implemented over the raw primitives). Tests, benchmarks and
+examples may use raw threading freely — stress tests hammer servers from
+plain ``threading.Thread``s on purpose. Thread-safe primitives the
+sanitizer does not model (``Event``, ``Semaphore``, ``queue.Queue``) are
+not restricted.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..framework import FileContext, Finding, Rule, Severity
+
+_WRAPPED = {
+    "threading.Thread": "repro.sanitizer.threads.san_thread",
+    "threading.Lock": "repro.sanitizer.locks.san_lock",
+    "threading.RLock": "repro.sanitizer.locks.san_rlock",
+    "threading.Condition": "repro.sanitizer.locks.san_condition",
+}
+
+
+def _in_scope(path: str) -> bool:
+    in_src = "src/repro/" in path or path.startswith("repro/")
+    return in_src and "repro/sanitizer/" not in path
+
+
+class SanRoutingRule(Rule):
+    rule_id = "FIG007"
+    severity = Severity.ERROR
+    fix_hint = ("construct through the sanitizer-aware wrapper instead "
+                "(repro.sanitizer.locks.san_lock/san_rlock/san_condition, "
+                "repro.sanitizer.threads.san_thread) so FIGARO_SAN=1 can "
+                "observe it; suppress with a reason only for locks that "
+                "must not be instrumented")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if not _in_scope(ctx.path):
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = ctx.resolve(node.func)
+            wrapper = _WRAPPED.get(dotted or "")
+            if wrapper is None:
+                continue
+            yield self.finding(
+                ctx, node,
+                f"`{dotted}(...)` bypasses the sanitizer wrappers — use "
+                f"`{wrapper}` so the runtime race detector can see it")

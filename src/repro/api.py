@@ -454,7 +454,7 @@ class JoinDataset:
                                f"have {sorted(rels)}")
             rels[node] = _append_rows(rels[node], keys, rows)
             self._tree = JoinTree(Database(rels), dict(self._tree.parent))
-            self._holder.appends += 1
+            self._holder.note_external_append()
             return True
         return self._holder.refresh({node: (keys, rows)})
 
@@ -477,10 +477,11 @@ class JoinDataset:
             for name in self._tree.preorder():
                 nodes[name] = {"capacity_rows": None,
                                "live_rows": self._tree.db[name].num_rows}
+        appends, regrows = self._holder.counters()
         return {
             "plan_built": plan is not None,
-            "appends": self._holder.appends,
-            "regrows": self._holder.regrows,
+            "appends": appends,
+            "regrows": regrows,
             "nodes": nodes,
             "traces": self._session.engine.trace_counts(),
             "trace_count": engine.trace_count(),

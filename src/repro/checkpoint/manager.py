@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.sanitizer.threads import san_thread
+
 __all__ = ["CheckpointManager"]
 
 
@@ -66,7 +68,7 @@ class CheckpointManager:
         if blocking:
             write()
         else:
-            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread = san_thread(write, daemon=True)
             self._thread.start()
 
     def wait(self) -> None:

@@ -49,7 +49,6 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
-import threading
 
 import jax
 import jax.numpy as jnp
@@ -57,6 +56,11 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.sanitizer import _state as _san_state
+from repro.sanitizer import numerics as _san_numerics
+from repro.sanitizer import retrace as _san_retrace
+from repro.sanitizer.locks import san_lock, san_rlock
+from repro.sanitizer.races import shared_state
 
 from .counts import compute_counts
 from .figaro import figaro_r0
@@ -127,6 +131,8 @@ def _column_moments(plan: FigaroPlan, data, dtype):
     return sums, total
 
 
+@shared_state({"_jitted": "_cache_lock", "_trace_counts": "_count_lock",
+               "_evictions": "_count_lock"})
 class FigaroEngine:
     """Executable cache + dispatch for the compiled FiGaRo pipeline.
 
@@ -180,38 +186,44 @@ class FigaroEngine:
                              f"got {max_cached}")
         self.donate_data = donate_data
         self.max_cached = max_cached
-        self._trace_counts: collections.Counter = collections.Counter()
-        self._evictions: collections.Counter = collections.Counter()
         # Executable cache, keyed on the FULL dispatch signature (kind, mesh,
         # plan treedef + leaf shapes/dtypes, static options) with one jit
         # wrapper per entry, so eviction can drop exactly one executable.
         # Insertion/access order is the LRU order. The locks make cache
         # bookkeeping and counter bumps safe under concurrent dispatch (the
         # async serving path dispatches from a background thread while the
-        # owning session may keep dispatching from the caller's thread).
+        # owning session may keep dispatching from the caller's thread); they
+        # are sanitizer-aware wrappers (FIG007) so FIGARO_SAN=1 can observe
+        # lock order and cross-thread access. Locks are created before the
+        # state they guard so the race detector can resolve them mid-__init__.
+        self._cache_lock = san_rlock("engine._cache_lock")
+        self._count_lock = san_lock("engine._count_lock")
+        self._trace_counts: collections.Counter = collections.Counter()
+        self._evictions: collections.Counter = collections.Counter()
         self._jitted: collections.OrderedDict = collections.OrderedDict()
-        self._cache_lock = threading.RLock()
-        self._count_lock = threading.Lock()
 
     # -- cache plumbing ------------------------------------------------------
 
     def trace_count(self, kind: str | None = None) -> int:
         """Number of traces (compilations) since construction; cache-hit tests
         assert this stays flat across same-signature dispatches."""
-        if kind is None:
-            return sum(self._trace_counts.values())
-        return self._trace_counts[kind]
+        with self._count_lock:
+            if kind is None:
+                return sum(self._trace_counts.values())
+            return self._trace_counts[kind]
 
     def trace_counts(self) -> dict[str, int]:
         """Per-kind trace counts as a plain dict (for stats surfaces)."""
-        return {k: int(v) for k, v in sorted(self._trace_counts.items())}
+        with self._count_lock:
+            return {k: int(v) for k, v in sorted(self._trace_counts.items())}
 
     def eviction_count(self, kind: str | None = None) -> int:
         """Executables evicted by the ``max_cached`` LRU policy (0 when
         unbounded); tracked per kind, next to the trace counters."""
-        if kind is None:
-            return sum(self._evictions.values())
-        return self._evictions[kind]
+        with self._count_lock:
+            if kind is None:
+                return sum(self._evictions.values())
+            return self._evictions[kind]
 
     def cache_size(self, kind: str | None = None) -> int:
         """Number of live cached executables (per kind, or total)."""
@@ -269,7 +281,7 @@ class FigaroEngine:
                 f"shard axis {axis!r} not in mesh axes {tuple(mesh.shape)}")
         return mesh, axis
 
-    def _make_jitted(self, kind: str, donate: bool, mesh, axis):
+    def _make_jitted(self, kind: str, donate: bool, mesh, axis, key: tuple):
         impl = getattr(self, f"_{kind}_impl")
         if mesh is None:
             inner = impl
@@ -291,9 +303,15 @@ class FigaroEngine:
         # wraps() keeps impl's signature visible so static_argnames resolve,
         # and putting the bump here (outside shard_map) guarantees exactly one
         # count per compilation however many times shard_map replays the body.
+        # Shadow (float64 reference) dispatches from the numerics sanitizer
+        # must not count as traces or feed the retrace sanitizer — they are
+        # sanitizer-internal, not part of the serving contract.
         @functools.wraps(impl)
         def wrapper(plan, data, **options):
-            self._bump(kind)
+            if not _san_state.STATE.shadow_active():
+                self._bump(kind)
+                if _san_state.STATE.enabled and _san_state.STATE.retrace:
+                    _san_retrace.note_trace(kind, key)
             return inner(plan, data, **options)
 
         return jax.jit(wrapper, static_argnames=self._STATIC[kind],
@@ -366,15 +384,26 @@ class FigaroEngine:
                 donate = self.donate_data and _backend_supports_donation()
             data = jax.device_put(data, NamedSharding(mesh, P(axis)))
         key = self._signature(kind, plan, data, donate, mesh, axis, options)
+        shadow = None
+        if _san_state.STATE.enabled and _san_state.STATE.numerics:
+            # Host-copy the request before the jit call: donation may consume
+            # the device buffers, and the float64 shadow re-dispatch needs
+            # the original values.
+            shadow = _san_numerics.prepare_shadow(self, kind, plan, data,
+                                                  options)
         with self._cache_lock:
             fn = self._jitted.get(key)
             if fn is None:
                 fn = self._jitted[key] = self._make_jitted(kind, donate, mesh,
-                                                           axis)
+                                                           axis, key)
                 self._evict_lru(kind)
             else:
                 self._jitted.move_to_end(key)  # LRU: most-recent at the tail
         out = fn(plan.without_data(), data, **options)
+        if shadow is not None:
+            # Before pad slicing: the shadow ran the same padded inputs, so
+            # the comparable shapes line up exactly.
+            _san_numerics.after_dispatch(self, shadow, out)
         if pad:
             out = jax.tree.map(lambda x: x[:b], out)
         if cap_pad:

@@ -46,11 +46,13 @@ new live sizes still fit (zero retraces), or grown buckets when they don't
 from __future__ import annotations
 
 import dataclasses
-import threading
 import weakref
 from typing import Callable, Mapping
 
 import numpy as np
+
+from repro.sanitizer.locks import san_rlock
+from repro.sanitizer.races import shared_state
 
 from .join_tree import (FigaroPlan, JoinTree, NodeIndex, PlanSpec, build_plan)
 from .relation import Database, Relation
@@ -283,6 +285,8 @@ def refresh_plan(
     return out
 
 
+@shared_state({"_plan": "_lock", "_servers": "_lock",
+               "appends": "_lock", "regrows": "_lock"})
 class PlanHolder:
     """Thread-safe owner of ONE current capacity plan.
 
@@ -307,9 +311,11 @@ class PlanHolder:
 
     def __init__(self, plan: FigaroPlan | None = None, *,
                  on_regrow: Callable[[FigaroPlan], FigaroPlan] | None = None):
-        self._plan = plan
+        # Lock first: the race detector resolves it while __init__ assigns
+        # the state it guards.
+        self._lock = san_rlock("plan_holder._lock")
         self._on_regrow = on_regrow
-        self._lock = threading.RLock()
+        self._plan = plan
         self._servers: weakref.WeakSet = weakref.WeakSet()
         self.appends = 0
         self.regrows = 0
@@ -326,13 +332,34 @@ class PlanHolder:
 
     def attach(self, server) -> None:
         """Register a server (anything with ``flush()``) to drain before
-        plan swaps. Held weakly — dropping the server detaches it."""
-        self._servers.add(server)
+        plan swaps. Held weakly — dropping the server detaches it.
+        WeakSet mutation is not atomic (it prunes dead refs internally), so
+        registration takes the holder lock like every other mutation."""
+        with self._lock:
+            self._servers.add(server)
 
     def drain(self) -> None:
-        """Block until every attached server has answered its queue."""
-        for server in list(self._servers):
+        """Block until every attached server has answered its queue.
+
+        The snapshot is taken under the lock; the flushes run outside it —
+        a server flush can dispatch and re-enter holder reads, and holding
+        the lock across it would invert the holder/server lock order."""
+        with self._lock:
+            servers = list(self._servers)
+        for server in servers:
             server.flush()
+
+    def note_external_append(self) -> None:
+        """Count an append applied outside `refresh` (the pre-plan ingest
+        path, where rows land in the source tables before the lazy first
+        plan build)."""
+        with self._lock:
+            self.appends += 1
+
+    def counters(self) -> tuple[int, int]:
+        """(appends, regrows) read consistently under the holder lock."""
+        with self._lock:
+            return self.appends, self.regrows
 
     def refresh(self, new_rows_per_node) -> bool:
         """Drain attached servers, then append rows via `refresh_plan`.

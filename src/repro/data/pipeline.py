@@ -18,6 +18,8 @@ import queue
 import threading
 from typing import Iterator
 
+from repro.sanitizer.threads import san_thread
+
 import numpy as np
 
 __all__ = ["TokenPipeline"]
@@ -72,7 +74,7 @@ class TokenPipeline:
                 except queue.Full:
                     continue
 
-        self._thread = threading.Thread(target=producer, daemon=True)
+        self._thread = san_thread(producer, daemon=True)
         self._thread.start()
 
         def consumer():

@@ -1,0 +1,179 @@
+"""Numerics sanitizer: sampled float64 shadow dispatch + NaN/Inf tripwires.
+
+The paper's accuracy claim is that Figaro's rounding errors relative to
+classical QR scale with the **database size** (sum of relation rows), not
+the join output size. This module turns that claim into a runtime
+assertion: on a sampled subset of engine dispatches it re-runs the same
+request through the same plan in float64 (a *shadow* dispatch) and compares
+a sign-invariant functional of the two results against the analytic budget
+
+    rel_err  <=  eps(primary dtype) * slack * database_rows
+
+mirroring `core.figaro.assembly_traffic`'s style of analytic accounting —
+the model counts the work (one Givens chain per column, length ~ database
+rows), not the constants, so ``slack`` carries the usual backward-stability
+engineering factor.
+
+Comparisons are sign/rotation-invariant per kind: QR and R₀ compare Gram
+matrices RᵀR (R is unique only up to row signs), SVD compares singular
+values, PCA compares explained variances, least-squares compares the
+(unique) coefficient vector. Shadow dispatches are marked thread-local so
+they never recurse, never bump the engine's trace counters, and never feed
+the retrace sanitizer.
+
+This module is the only sanitizer file that touches jax/numpy; it is
+imported lazily from the engine so the jax-free analysis CI job can import
+``repro.sanitizer``.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+
+import numpy as np
+
+from ._state import STATE
+
+_lock = threading.Lock()
+_dispatch_counts: collections.Counter = collections.Counter()
+_events: "collections.deque" = collections.deque(maxlen=256)
+
+
+def reset() -> None:
+    with _lock:
+        _dispatch_counts.clear()
+        _events.clear()
+
+
+def events() -> list[dict]:
+    with _lock:
+        return [dict(e) for e in _events]
+
+
+def _sample(kind: str) -> bool:
+    """First dispatch of each kind always shadows; then every Nth."""
+    with _lock:
+        _dispatch_counts[kind] += 1
+        n = _dispatch_counts[kind]
+    every = max(int(STATE.sample_every), 1)
+    return n == 1 or n % every == 0
+
+
+def _x64_available() -> bool:
+    import jax
+
+    return bool(jax.config.jax_enable_x64)
+
+
+class _Shadow:
+    __slots__ = ("kind", "plan", "host", "options", "primary")
+
+    def __init__(self, kind, plan, host, options, primary) -> None:
+        self.kind = kind
+        self.plan = plan
+        self.host = host
+        self.options = options
+        self.primary = primary
+
+
+def prepare_shadow(engine, kind: str, plan, data, options) -> _Shadow | None:
+    """Called from ``FigaroEngine._dispatch`` *before* the jit call (data may
+    be donated by it, so the host copy must happen here). Returns a shadow
+    token, or None when this dispatch is not sampled / not shadowable."""
+    if STATE.shadow_active():
+        return None
+    if not _sample(kind):
+        return None
+    primary = np.dtype(options.get("dtype", np.float32))
+    if primary.kind != "f" or primary == np.dtype(np.float64):
+        return None
+    if not _x64_available():
+        return None  # f64 would silently downcast: nothing to compare
+    host = None
+    if data is not None:
+        host = tuple(np.asarray(d) for d in data)
+    return _Shadow(kind, plan, host, dict(options), primary)
+
+
+def database_rows(host, plan) -> int:
+    """Σ relation rows — the paper's database size (each data leaf is
+    [..., m_i, n_i]; the leading batch axis, if any, does not multiply the
+    per-pipeline rotation count)."""
+    leaves = host if host is not None else tuple(plan.data)
+    return int(sum(int(np.shape(d)[-2]) for d in leaves)) or 1
+
+
+def error_budget(primary: np.dtype, db_rows: int) -> float:
+    return float(np.finfo(primary).eps) * STATE.numerics_slack * db_rows
+
+
+def _comparable(kind: str, out) -> np.ndarray:
+    """Sign/rotation-invariant functional of a dispatch result."""
+    if kind.startswith(("r0", "qr")):
+        r = np.asarray(out, dtype=np.float64)
+        return np.matmul(np.swapaxes(r, -1, -2), r)  # Gram: RᵀR
+    if kind.startswith("svd"):
+        return np.asarray(out[0], dtype=np.float64)  # singular values
+    if kind.startswith("pca"):
+        return np.asarray(out.explained_variance, dtype=np.float64)
+    if kind.startswith("least_squares"):
+        return np.asarray(out[0], dtype=np.float64)  # beta
+    raise ValueError(f"no numerics comparison for kind={kind!r}")
+
+
+def relative_error(primary_out, shadow_out, kind: str) -> float:
+    a = _comparable(kind, primary_out)
+    b = _comparable(kind, shadow_out)
+    denom = max(float(np.linalg.norm(b)), np.finfo(np.float64).tiny)
+    return float(np.linalg.norm(a - b)) / denom
+
+
+def _check_finite(kind: str, out) -> None:
+    import jax
+
+    for i, leaf in enumerate(jax.tree_util.tree_leaves(out)):
+        arr = np.asarray(leaf)
+        if arr.dtype.kind != "f":
+            continue
+        if not np.all(np.isfinite(arr)):
+            bad = int(arr.size - np.count_nonzero(np.isfinite(arr)))
+            STATE.add_finding(
+                "numerics",
+                f"non-finite values in kind={kind} output leaf {i} "
+                f"({bad}/{arr.size} entries)",
+                details={"kind": kind, "leaf": i, "bad": bad},
+                dedupe_key=("numerics-nonfinite", kind, i),
+            )
+
+
+def after_dispatch(engine, shadow: _Shadow | None, out) -> None:
+    """Called from ``_dispatch`` after the primary result (pre-pad-slicing,
+    so shapes match the shadow's, whose inputs carry the same pad)."""
+    if shadow is None:
+        return
+    _check_finite(shadow.kind, out)
+    opts = dict(shadow.options)
+    opts["dtype"] = np.dtype(np.float64)
+    STATE.set_shadow(True)
+    try:
+        ref = engine._dispatch(shadow.kind, shadow.plan, shadow.host, **opts)
+    finally:
+        STATE.set_shadow(False)
+    err = relative_error(out, ref, shadow.kind)
+    db_rows = database_rows(shadow.host, shadow.plan)
+    budget = error_budget(shadow.primary, db_rows)
+    with _lock:
+        _events.append({"kind": shadow.kind, "rel_err": err,
+                        "budget": budget, "db_rows": db_rows,
+                        "dtype": shadow.primary.name})
+    if err > budget:
+        STATE.add_finding(
+            "numerics",
+            f"kind={shadow.kind} {shadow.primary.name} error {err:.3e} "
+            f"exceeds database-size budget {budget:.3e} "
+            f"(eps*{STATE.numerics_slack:g}*{db_rows} rows)",
+            details={"kind": shadow.kind, "rel_err": err, "budget": budget,
+                     "db_rows": db_rows},
+            dedupe_key=("numerics-budget", shadow.kind),
+        )

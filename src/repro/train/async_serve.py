@@ -44,6 +44,9 @@ import numpy as np
 
 from repro.core.join_tree import FigaroPlan
 from repro.core.plan_cache import PlanHolder, pad_data
+from repro.sanitizer.locks import san_condition, san_lock
+from repro.sanitizer.races import shared_state
+from repro.sanitizer.threads import san_thread
 
 __all__ = ["SERVE_KINDS", "validate_serve_kind", "FigaroFuture",
            "AsyncFigaroServer"]
@@ -196,6 +199,8 @@ def _complete_loop(server_ref, out_q):
         del server
 
 
+@shared_state({"_outstanding": "_cond", "_closed": "_close_lock",
+               "_threads": "_thread_lock"})
 class AsyncFigaroServer:
     """Pipelined micro-batching serving endpoint for one join structure.
 
@@ -248,12 +253,14 @@ class AsyncFigaroServer:
         self._depth_sem = threading.Semaphore(queue_depth)
         self._run_gate = threading.Event()
         self._run_gate.set()
-        self._cond = threading.Condition()
+        # Sanitizer-aware locks (FIG007), created before the state they
+        # guard so FIGARO_SAN=1 can resolve them mid-__init__.
+        self._cond = san_condition("server._cond")
+        self._close_lock = san_lock("server._close_lock")  # closed vs enqueue
+        self._thread_lock = san_lock("server._thread_lock")
         self._outstanding = 0
         self._closed = False
-        self._close_lock = threading.Lock()  # closed-flag vs enqueue order
         self._threads: list[threading.Thread] | None = None
-        self._thread_lock = threading.Lock()
         self._finalizer = weakref.finalize(self, self._in_q.put, _SHUTDOWN)
 
     # -- plan lifecycle (shared with the owning JoinDataset) -----------------
@@ -340,18 +347,20 @@ class AsyncFigaroServer:
     # -- worker plumbing -----------------------------------------------------
 
     def _ensure_threads(self) -> None:
-        if self._threads is not None:
-            return
+        # No unlocked fast-path read: `_threads` is written under
+        # `_thread_lock`, so the check must hold it too (the uncontended
+        # acquire is cheap, and the lockset race detector would rightly flag
+        # the bare read once a second thread has gone through here).
         with self._thread_lock:
             if self._threads is not None:
                 return
             ref = weakref.ref(self)
             threads = [
-                threading.Thread(target=_dispatch_loop,
-                                 args=(ref, self._in_q, self._out_q),
-                                 name="figaro-serve-dispatch", daemon=True),
-                threading.Thread(target=_complete_loop, args=(ref, self._out_q),
-                                 name="figaro-serve-complete", daemon=True),
+                san_thread(_dispatch_loop,
+                           args=(ref, self._in_q, self._out_q),
+                           name="figaro-serve-dispatch", daemon=True),
+                san_thread(_complete_loop, args=(ref, self._out_q),
+                           name="figaro-serve-complete", daemon=True),
             ]
             for t in threads:
                 t.start()
@@ -478,17 +487,21 @@ class AsyncFigaroServer:
 
     def close(self) -> None:
         """Drain outstanding work and stop the worker threads."""
-        if self._closed:
-            return
+        with self._close_lock:  # `_closed` is only ever read under the lock
+            if self._closed:
+                return
         self.flush()  # releases any pause() hold first
+        threads = None
         with self._close_lock:
             if self._closed:
                 return
             self._closed = True
-            if self._threads is not None:
+            with self._thread_lock:
+                threads = self._threads
+            if threads is not None:
                 self._in_q.put(_SHUTDOWN)
-        if self._threads is not None:
-            for t in self._threads:
+        if threads is not None:
+            for t in threads:
                 t.join(timeout=10.0)
 
     def __enter__(self):

@@ -346,6 +346,161 @@ def test_fig005_lockless_classes_exempt():
     assert "FIG005" not in _rules_fired(FIG005_NO_LOCKS)
 
 
+# -- FIG006 cross-thread escape ----------------------------------------------
+
+FIG006_BAD = """
+    import threading
+
+    class Server:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.count = 0
+            self.items = []
+
+        def bump(self):
+            with self._lock:
+                self.count += 1
+                self.items.append(1)
+
+        def stats(self):
+            return self.count
+
+        def note(self):
+            self.items.append(2)
+"""
+
+FIG006_GOOD = """
+    import threading
+    import queue
+
+    class Server:
+        _san_atomic = ("flag",)
+
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.count = 0
+            self.frozen = 41
+            self.q = queue.Queue()
+            self.flag = False
+
+        def bump(self):
+            with self._lock:
+                self.count += 1
+                self._grow()
+
+        def _grow(self):
+            self.count += 1
+
+        def stats(self):
+            with self._lock:
+                return self.count
+
+        def lockfree(self):
+            self.q.put(1)           # thread-safe factory
+            self.flag = True        # figaro-lint: disable=FIG005 -- atomic
+            return self.frozen + (1 if self.flag else 0)
+"""
+
+FIG006_THREAD_ENTRY = """
+    import threading
+
+    class Server:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.count = 0
+            threading.Thread(target=self._loop).start()
+
+        def _loop(self):
+            return self.count
+
+        def bump(self):
+            with self._lock:
+                self.count += 1
+"""
+
+
+def test_fig006_unlocked_read_and_mutcall_fire():
+    msgs = [f.message for f in _findings(FIG006_BAD) if f.rule == "FIG006"]
+    assert any("Server.stats reads" in m and "self.count" in m for m in msgs)
+    assert any("Server.note mutates (in place)" in m and "self.items" in m
+               for m in msgs)
+    # the locked accesses in bump() are not findings
+    assert not any("Server.bump" in m for m in msgs)
+
+
+def test_fig006_exemptions_quiet():
+    """Locked reads, immutable attrs, thread-safe factories, _san_atomic
+    annotations, and interprocedurally-locked private helpers all pass."""
+    assert "FIG006" not in _rules_fired(FIG006_GOOD)
+
+
+def test_fig006_thread_entry_never_inherits_lock():
+    """A method whose bound reference escapes to a Thread target is a thread
+    entry: its unlocked read is a finding even though its only in-class
+    'call site' is the escape itself."""
+    msgs = [f.message for f in _findings(FIG006_THREAD_ENTRY)
+            if f.rule == "FIG006"]
+    assert any("Server._loop reads" in m and "self.count" in m for m in msgs)
+
+
+def test_fig006_does_not_duplicate_fig005_writes():
+    """Plain unlocked writes stay FIG005 findings only."""
+    findings = _findings(FIG005_BAD)
+    assert "FIG005" in {f.rule for f in findings}
+    assert "FIG006" not in {f.rule for f in findings}
+
+
+# -- FIG007 sanitizer routing ------------------------------------------------
+
+FIG007_BAD = """
+    import threading
+
+    def start(worker):
+        lock = threading.Lock()
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        return lock, t
+"""
+
+FIG007_GOOD = """
+    import threading
+
+    from repro.sanitizer.locks import san_lock
+    from repro.sanitizer.threads import san_thread
+
+    def start(worker):
+        lock = san_lock("start.lock")
+        t = san_thread(worker, daemon=True)
+        t.start()
+        gate = threading.Event()      # not modelled: allowed raw
+        sem = threading.Semaphore(4)  # not modelled: allowed raw
+        return lock, t, gate, sem
+"""
+
+
+def test_fig007_raw_threading_in_src_fires():
+    msgs = [f.message for f in _findings(FIG007_BAD) if f.rule == "FIG007"]
+    assert any("threading.Lock" in m and "san_lock" in m for m in msgs)
+    assert any("threading.Thread" in m and "san_thread" in m for m in msgs)
+
+
+def test_fig007_wrappers_and_unmodelled_primitives_quiet():
+    assert "FIG007" not in _rules_fired(FIG007_GOOD)
+
+
+def test_fig007_out_of_scope_paths_ignored():
+    assert "FIG007" not in _rules_fired(
+        FIG007_BAD, path="tests/test_stress.py")
+    assert "FIG007" not in _rules_fired(
+        FIG007_BAD, path="src/repro/sanitizer/locks.py")
+
+
+def test_fix_hint_rendered_in_human_output():
+    finding = next(f for f in _findings(FIG007_BAD) if f.rule == "FIG007")
+    rendered = finding.render()
+    assert "\n    fix: " in rendered and finding.fix_hint in rendered
+
+
 # -- suppressions ------------------------------------------------------------
 
 def test_line_suppression_silences_only_that_line():

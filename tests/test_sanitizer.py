@@ -1,0 +1,274 @@
+"""figaro-san runtime sanitizer: enable/disable semantics and near-zero
+disabled cost, lock-order cycle detection on a synthetic deadlock fixture,
+lockset race detection (fires on the unlocked fixture, quiet on the fixed
+one and on the instrumented production classes), retrace attribution naming
+the diverged signature component, and the float64 shadow dispatch asserting
+the paper's database-size error budget on the retailer/yelp schemas."""
+
+import threading
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import sanitizer
+from repro.core.engine import FigaroEngine
+from repro.core.join_tree import build_plan
+from repro.data.relational import retailer_like, yelp_like
+from repro.sanitizer import numerics as san_numerics
+from repro.sanitizer import retrace as san_retrace
+from repro.sanitizer.locks import san_lock, san_rlock
+from repro.sanitizer.races import shared_state
+from repro.sanitizer.threads import san_thread
+
+
+@pytest.fixture
+def san():
+    """Sanitizer armed for one test, fully torn down after."""
+    sanitizer.enable(sample_every=1)
+    sanitizer.reset()
+    yield sanitizer
+    sanitizer.reset()
+    sanitizer.disable()
+
+
+def _run_threads(*targets):
+    threads = [threading.Thread(target=t) for t in targets]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=10.0)
+
+
+# -- enable / disable ---------------------------------------------------------
+
+
+def test_disabled_by_default_and_hooks_physically_removed():
+    assert not sanitizer.enabled()
+    # Disabled means the race hooks are *gone* from the instrumented classes,
+    # not short-circuiting: the hot path pays nothing.
+    from repro.core.plan_cache import PlanHolder
+
+    assert "__getattribute__" not in PlanHolder.__dict__
+    sanitizer.enable()
+    try:
+        assert sanitizer.enabled()
+        assert "__getattribute__" in PlanHolder.__dict__
+    finally:
+        sanitizer.disable()
+    assert "__getattribute__" not in PlanHolder.__dict__
+
+
+def test_report_empty_and_grouped(san):
+    assert "no findings" in san.report()
+    sanitizer.STATE.add_finding("race", "synthetic", details={})
+    assert "race" in san.report() and "synthetic" in san.report()
+
+
+# -- lock-order cycles --------------------------------------------------------
+
+
+def test_lock_order_cycle_flagged_on_synthetic_deadlock(san):
+    """Classic AB/BA inversion: each acquisition order is individually fine,
+    together they can deadlock. The graph flags the cycle without needing the
+    interleaving to actually hang."""
+    a, b = san_lock("fixture.A"), san_lock("fixture.B")
+    with a:
+        with b:
+            pass
+    assert san.findings("lock-order") == []
+    with b:
+        with a:
+            pass
+    msgs = [f.message for f in san.findings("lock-order")]
+    assert any("lock acquisition cycle (potential deadlock)" in m
+               and "fixture.A" in m and "fixture.B" in m for m in msgs)
+
+
+def test_consistent_lock_order_is_quiet(san):
+    a, b = san_lock("fixture.C"), san_lock("fixture.D")
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+    assert san.findings("lock-order") == []
+
+
+def test_rlock_reentrancy_is_not_a_self_cycle(san):
+    r = san_rlock("fixture.R")
+    with r:
+        with r:
+            pass
+    assert san.findings("lock-order") == []
+
+
+# -- lockset race detection ---------------------------------------------------
+
+
+def _bad_counter_cls():
+    @shared_state({"counter": "_lock"})
+    class Bad:
+        def __init__(self):
+            self._lock = san_lock("bad._lock")
+            self.counter = 0
+
+        def bump_locked(self):
+            with self._lock:
+                self.counter += 1
+
+        def read_unlocked(self):
+            return self.counter
+
+    return Bad
+
+
+def _good_counter_cls():
+    @shared_state({"counter": "_lock"})
+    class Good:
+        def __init__(self):
+            self._lock = san_lock("good._lock")
+            self.counter = 0
+
+        def bump(self):
+            with self._lock:
+                self.counter += 1
+
+        def read(self):
+            with self._lock:
+                return self.counter
+
+    return Good
+
+
+def test_race_detector_flags_unlocked_cross_thread_read(san):
+    bad = _bad_counter_cls()()
+    bad.bump_locked()  # observed from the constructing thread first
+    _run_threads(bad.read_unlocked)
+    msgs = [f.message for f in san.findings("race")]
+    assert any("Bad.counter read from a second thread without _lock held"
+               in m for m in msgs)
+
+
+def test_race_detector_quiet_on_locked_class(san):
+    good = _good_counter_cls()()
+    _run_threads(*([good.bump] * 2 + [good.read] * 2))
+    assert san.findings("race") == []
+
+
+def test_single_threaded_unlocked_access_is_not_a_race(san):
+    bad = _bad_counter_cls()()
+    for _ in range(5):
+        bad.read_unlocked()
+    assert san.findings("race") == []
+
+
+def test_production_classes_clean_under_two_threads(san):
+    """Regression for the audited unguarded reads: PlanHolder counters and
+    engine trace counts hammered from two threads produce zero findings."""
+    from repro.core.plan_cache import PlanHolder
+
+    holder = PlanHolder(build_plan(retailer_like(scale=20, cols=2)))
+
+    def worker():
+        for _ in range(50):
+            holder.note_external_append()
+            holder.counters()
+
+    _run_threads(worker, worker)
+    assert holder.counters()[0] == 100  # 2 threads x 50, none lost
+    assert san.findings("race") == []
+
+
+def test_thread_exit_holding_lock_flagged(san):
+    lock = san_lock("fixture.leak")
+
+    def leaky():
+        lock.acquire()
+
+    t = san_thread(leaky)
+    t.start()
+    t.join(timeout=10.0)
+    msgs = [f.message for f in san.findings("thread")]
+    assert any("exited holding lock" in m and "fixture.leak" in m
+               for m in msgs)
+
+
+# -- retrace attribution ------------------------------------------------------
+
+
+def test_retrace_attribution_names_diverged_component(san):
+    # Numerics off: the f64 shadow would pre-compile the very signature the
+    # armed dispatch below is supposed to introduce.
+    sanitizer.STATE.numerics = False
+    plan = build_plan(retailer_like(scale=20, cols=2))
+    engine = FigaroEngine(donate_data=False)
+    engine.qr(plan, dtype=jnp.float32)
+    engine.qr(plan, dtype=jnp.float32)  # cache hit: no event
+    events = [e for e in san_retrace.events() if e.kind == "qr"]
+    assert len(events) == 1 and events[0].diverged == []
+    assert san.findings("retrace") == []  # warmup compiles are not findings
+
+    sanitizer.expect_no_retrace()
+    engine.qr(plan, dtype=jnp.float32)  # steady state: still cached
+    assert san.findings("retrace") == []
+    engine.qr(plan, dtype=jnp.float64)  # dtype lives in the options component
+    msgs = [f.message for f in san.findings("retrace")]
+    assert any("retrace of kind=qr" in m and "options" in m for m in msgs)
+    last = san_retrace.last_trace("qr")
+    assert last is not None and last.diverged == ["options"]
+
+
+def test_shadow_dispatches_do_not_bump_or_retrace(san):
+    """The float64 shadow runs through the same executable cache but must not
+    count as a trace or feed the retrace tripwire — otherwise the serving
+    zero-retrace contract could not be asserted under FIGARO_SAN=1."""
+    plan = build_plan(retailer_like(scale=20, cols=2))
+    engine = FigaroEngine(donate_data=False)
+    engine.qr(plan, dtype=jnp.float32)  # sampled: shadows through f64
+    assert san_numerics.events(), "first dispatch must be shadow-sampled"
+    assert engine.trace_count("qr") == 1
+    assert all(ev.kind == "qr" for ev in san_retrace.events())
+
+
+# -- numerics: the paper's database-size error budget -------------------------
+
+
+@pytest.mark.parametrize("maker", [
+    lambda: retailer_like(scale=60, cols=2),
+    lambda: yelp_like(scale=40, cols=2),
+], ids=["retailer", "yelp"])
+def test_f32_error_within_database_size_budget(san, maker):
+    """rel_err(f32 vs f64 shadow) <= eps(f32) * slack * database rows — the
+    paper's claim that Figaro's rounding error scales with database size."""
+    plan = build_plan(maker())
+    engine = FigaroEngine(donate_data=False)
+    engine.qr(plan, dtype=jnp.float32)
+    events = [e for e in san_numerics.events() if e["kind"] == "qr"]
+    assert len(events) == 1
+    ev = events[0]
+    db_rows = san_numerics.database_rows(tuple(plan.data), plan)
+    assert ev["db_rows"] == db_rows and db_rows > 0
+    assert ev["budget"] == pytest.approx(
+        float(np.finfo(np.float32).eps) * sanitizer.STATE.numerics_slack
+        * db_rows)
+    assert 0.0 <= ev["rel_err"] <= ev["budget"]
+    assert san.findings("numerics") == []
+
+
+def test_nan_input_trips_nonfinite_tripwire(san):
+    plan = build_plan(retailer_like(scale=20, cols=2))
+    engine = FigaroEngine(donate_data=False)
+    data = [np.array(d, dtype=np.float64, copy=True) for d in plan.data]
+    data[0][0, 0] = np.nan
+    engine.qr(plan, tuple(data), dtype=jnp.float32)
+    msgs = [f.message for f in san.findings("numerics")]
+    assert any("non-finite" in m and "kind=qr" in m for m in msgs)
+
+
+def test_numerics_sampling_skips_unsampled_dispatches(san):
+    sanitizer.STATE.sample_every = 1000
+    plan = build_plan(retailer_like(scale=20, cols=2))
+    engine = FigaroEngine(donate_data=False)
+    engine.qr(plan, dtype=jnp.float32)  # first dispatch always shadows
+    engine.qr(plan, dtype=jnp.float32)  # 2nd of 1000: not sampled
+    assert len([e for e in san_numerics.events() if e["kind"] == "qr"]) == 1

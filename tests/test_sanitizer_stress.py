@@ -1,0 +1,168 @@
+"""Concurrency stress under FIGARO_SAN: several threads hammer ONE
+`AsyncFigaroServer` with interleaved submit / append / stats while the full
+runtime sanitizer (lockset race detector, lock-order graph, retrace tripwire
+after warmup) is armed. The contract: zero detector findings, every future
+resolves, and resolution order preserves per-thread submission order.
+
+The CI analysis job runs this file with ``FIGARO_SAN=1`` in the environment;
+standalone runs arm the sanitizer through the fixture, so the assertion is
+identical either way."""
+
+import threading
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import figaro, sanitizer
+
+N_SUBMITTERS = 3
+SUBMITS_PER_THREAD = 5
+N_APPENDS = 3
+N_STATS_READERS = 2
+
+
+@pytest.fixture
+def san():
+    sanitizer.enable()
+    sanitizer.reset()
+    yield sanitizer
+    sanitizer.reset()
+    sanitizer.disable()
+
+
+def _star_ds(session):
+    rng = np.random.default_rng(7)
+    tables = {
+        "Orders": ({"cust": np.arange(20) % 8, "prod": np.arange(20) % 4},
+                   rng.normal(size=(20, 2)), ["amount", "qty"]),
+        "Customers": ({"cust": np.arange(8)},
+                      rng.normal(size=(8, 2)), ["age", "income"]),
+        "Products": ({"prod": np.arange(4)},
+                     rng.normal(size=(4, 1)), ["price"]),
+    }
+    return session.ingest(tables).join(
+        "Orders", [("Orders", "Customers"), ("Orders", "Products")])
+
+
+def test_threaded_submit_append_stats_zero_findings(san):
+    sess = figaro.Session(headroom=16)
+    ds = _star_ds(sess)
+    server = ds.serve(kind="qr", dtype=jnp.float64, max_batch=4)
+
+    # Warm every batch bucket the storm can coalesce into (capacities 1, 2
+    # and 4 with max_batch=4), THEN arm the retrace tripwire: any further
+    # compile during the storm is a finding with signature attribution.
+    warm = lambda: tuple(np.asarray(d) for d in ds.plan.data)
+    for group in (1, 2, 3):
+        server.pause()
+        futs = [server.submit(warm()) for _ in range(group)]
+        server.resume()
+        for f in futs:
+            np.asarray(f.result(timeout=120))
+    sanitizer.expect_no_retrace()
+
+    resolved = []  # (submitter_id, seq), appended in resolution order
+    resolved_lock = threading.Lock()
+    errors = []
+
+    def record(tid, seq):
+        def cb(fut):
+            with resolved_lock:
+                resolved.append((tid, seq))
+        return cb
+
+    n = ds.plan.num_cols
+
+    def submitter(tid):
+        rng = np.random.default_rng(tid)
+        try:
+            futures = []
+            for seq in range(SUBMITS_PER_THREAD):
+                req = tuple(rng.normal(size=np.asarray(d).shape)
+                            for d in ds.plan.data)
+                fut = server.submit(req)
+                fut.add_done_callback(record(tid, seq))
+                futures.append(fut)
+            for fut in futures:
+                r = np.asarray(fut.result(timeout=120))
+                assert r.shape == (n, n)
+        except BaseException as e:  # surfaced after the join below
+            errors.append(e)
+
+    def appender():
+        try:
+            for step in range(N_APPENDS):
+                in_cap = server.append(
+                    "Orders", ({"cust": np.array([step]),
+                                "prod": np.array([step % 4])},
+                               np.ones((1, 2)) * step))
+                assert in_cap, "append within headroom must stay in capacity"
+        except BaseException as e:
+            errors.append(e)
+
+    def stats_reader():
+        try:
+            for _ in range(20):
+                st = ds.stats()
+                assert st["nodes"]["Orders"]["live_rows"] >= 20
+        except BaseException as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=submitter, args=(tid,))
+               for tid in range(N_SUBMITTERS)]
+    threads.append(threading.Thread(target=appender))
+    threads += [threading.Thread(target=stats_reader)
+                for _ in range(N_STATS_READERS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300.0)
+    assert not any(t.is_alive() for t in threads), "stress thread hung"
+    assert errors == [], errors
+
+    server.flush()
+    server.close()
+
+    # Per-thread submission order is preserved in resolution order: the
+    # completion thread resolves futures in dispatch order, and each
+    # submitter's stream is sequential.
+    with resolved_lock:
+        done = list(resolved)
+    assert len(done) == N_SUBMITTERS * SUBMITS_PER_THREAD
+    for tid in range(N_SUBMITTERS):
+        seqs = [seq for t, seq in done if t == tid]
+        assert seqs == sorted(seqs), \
+            f"thread {tid} futures resolved out of submission order: {seqs}"
+
+    # The tentpole assertion: the whole storm ran under the armed sanitizer
+    # with nothing to report.
+    assert sanitizer.findings() == [], "\n" + sanitizer.report()
+
+    st = ds.stats()
+    assert st["appends"] == N_APPENDS and st["regrows"] == 0
+
+
+def test_two_servers_one_holder_under_sanitizer(san):
+    """Sibling servers share the PlanHolder; appends through one must stay
+    race-free and visible through the other while both dispatch."""
+    sess = figaro.Session(headroom=16)
+    ds = _star_ds(sess)
+    s1 = ds.serve(kind="qr", dtype=jnp.float64)
+    s2 = ds.serve(kind="qr", dtype=jnp.float64)
+    req = lambda: tuple(np.asarray(d) for d in ds.plan.data)
+
+    def pump(server):
+        for _ in range(3):
+            np.asarray(server.submit(req()).result(timeout=120))
+
+    t1 = threading.Thread(target=pump, args=(s1,))
+    t2 = threading.Thread(target=pump, args=(s2,))
+    t1.start(); t2.start()
+    t1.join(timeout=300.0); t2.join(timeout=300.0)
+    assert s1.append("Orders", ({"cust": np.array([0]),
+                                 "prod": np.array([0])}, np.ones((1, 2))))
+    assert ds.plan is s2.plan, "holder forked between sibling servers"
+    s1.close()
+    s2.close()
+    assert sanitizer.findings() == [], "\n" + sanitizer.report()
