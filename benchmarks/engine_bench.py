@@ -436,6 +436,13 @@ def run(csv: Csv, *, fast: bool = False) -> None:
         f"baseline {t_base:.6f}s by more than 2% + 1ms — are the race "
         f"hooks being uninstalled?")
 
+    # -- planner: predicted-cost ranking vs measured runtime per retailer
+    # orientation, plus root="auto" planning overhead vs one compile
+    # (implementation shared with benchmarks.join_tree_effect).
+    from .join_tree_effect import planner_section
+
+    planner_section(add, fast=fast)
+
     write_bench_json("engine", rows)
 
 

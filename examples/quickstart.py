@@ -20,7 +20,12 @@ The whole FiGaRo path goes through ONE surface — `repro.figaro`
      per-node Pallas kernel and band-wise R0 assembly, numerics-preserving
      and cached per static signature;
   9. figaro-lint: `python -m repro.analysis` — the repo's own static
-     analyzer machine-checks the invariants steps 1-8 rely on.
+     analyzer machine-checks the invariants steps 1-8 rely on;
+ 10. figaro-san: `FIGARO_SAN=1` — runtime race/retrace/numerics detectors
+     over the same serving stack;
+ 11. figaro-plan: `join(edges)` with no root — the cost-based optimizer
+     picks the join-tree orientation, `ds.explain()` shows the ranking, and
+     appends can adaptively re-root the live plan.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -276,3 +281,36 @@ sanitizer.disable()
 # suite and a multi-threaded stress test under FIGARO_SAN=1 asserting zero
 # findings, so a new detector immediately guards the real serving stack.
 print("OK — FIGARO_SAN=1 arms the race/retrace/numerics sanitizers.")
+
+# --- 11. figaro-plan: cost-based join-tree choice, root="auto" --------------
+# Table 2 of the paper shows the join-tree orientation changes FiGaRo's
+# runtime by orders of magnitude without changing R. Leaving the root out of
+# `join(...)` (or passing root="auto") hands that choice to figaro-plan
+# (src/repro/planner/): it keeps EXACT per-relation statistics (row counts,
+# distinct join keys, per-edge fan-outs — pure numpy, collected at ingest,
+# merged incrementally on append) and scores every rooted orientation of the
+# acyclic join graph with the paper's complexity model. The chosen tree is
+# built through the same code path as a hand-rooted one, so when the planner
+# agrees with you the compiled executable is shared: auto costs zero extra
+# retraces.
+traces_before = sess.engine.trace_count()
+auto = sess.ingest(tables).join(edges)    # no root: the planner picks one
+print(auto.explain())                     # ranked orientations + breakdown
+assert auto.tree.root == "Orders"         # recovers the step-1 hand choice
+np.asarray(auto.qr())
+assert sess.engine.trace_count() == traces_before, "auto reused the plan"
+
+# Auto-rooted datasets re-plan adaptively: every append folds the new keys
+# into the statistics, and when growth makes another orientation cheaper by
+# more than the hysteresis margin — `join(edges, reroot=True,
+# hysteresis=0.5)` are the knobs — the dataset rebuilds on the better root
+# at a drain point (in-flight server futures still answer on the old plan;
+# re-read `ds.columns` afterwards, the column order follows the live tree).
+# This star schema keeps its fact table cheapest, so appends never flip it:
+auto.append("Orders", {"cust": np.array([0, 1]), "prod": np.array([2, 3])},
+            rng.normal(size=(2, 2)))
+st = auto.stats()
+assert (st["auto_root"], st["reroots"]) == (True, 0)
+print(f"after append        : root={st['root']} (re-roots: {st['reroots']}, "
+      f"appended rows: {st['append_volume']})")
+print("OK — figaro-plan picks the orientation; appends keep it honest.")

@@ -5,6 +5,7 @@ from __future__ import annotations
 from ..framework import Rule
 from .compat_pin import CompatPinRule
 from .dtype_drift import DtypeDriftRule
+from .jaxfree import JaxFreePlannerRule
 from .lock_discipline import LockDisciplineRule
 from .pallas_kernel import PallasKernelRule
 from .retrace import RetraceHazardRule
@@ -13,11 +14,11 @@ from .thread_escape import ThreadEscapeRule
 
 __all__ = ["all_rules", "CompatPinRule", "RetraceHazardRule",
            "DtypeDriftRule", "PallasKernelRule", "LockDisciplineRule",
-           "ThreadEscapeRule", "SanRoutingRule"]
+           "ThreadEscapeRule", "SanRoutingRule", "JaxFreePlannerRule"]
 
 
 def all_rules() -> list[Rule]:
     """Fresh rule instances (rules may keep per-run state)."""
     return [CompatPinRule(), RetraceHazardRule(), DtypeDriftRule(),
             PallasKernelRule(), LockDisciplineRule(), ThreadEscapeRule(),
-            SanRoutingRule()]
+            SanRoutingRule(), JaxFreePlannerRule()]

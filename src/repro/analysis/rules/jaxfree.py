@@ -1,0 +1,93 @@
+"""FIG008 — figaro-plan (`src/repro/planner/`) must stay jax-free.
+
+The planner's statistics and cost model run at ingest time on the host:
+`stats_for` is called from `TableSet.join`, `Replanner.proposal` from every
+`ds.append`. Pulling `jax` / `jax.numpy` in there would (a) trace host-side
+bookkeeping — every schema change would silently retrace a "cost model"
+executable — and (b) drag a jax import into the analysis CI job, which runs
+without jax on purpose. The planner is also deliberately decoupled from the
+repo's runtime modules (it duck-types `Relation` / `Database` / `JoinTree`),
+so `repro.data.relational` can import it for ``root="auto"`` without a
+cycle; an import of any `repro.*` module outside the planner itself is
+flagged for the same reason.
+
+Suppression: a future planner module that legitimately needs a runtime type
+for `typing` only should guard it under ``if TYPE_CHECKING:`` (exempt) rather
+than suppressing the rule.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..framework import FileContext, Finding, Rule, Severity
+
+#: the path fragment that scopes the rule (planner package sources only).
+_SCOPE = "repro/planner/"
+
+#: module roots that must never be imported from planner code.
+_FORBIDDEN_ROOTS = ("jax", "jaxlib")
+
+#: repro imports the planner may use: itself (relative imports resolve to
+#: these) — nothing else; the planner duck-types the core containers.
+_ALLOWED_REPRO = ("repro.planner",)
+
+
+def _type_checking_spans(tree: ast.AST) -> list[tuple[int, int]]:
+    """Line spans of ``if TYPE_CHECKING:`` bodies (typing-only imports are
+    erased at runtime and cannot drag jax in)."""
+    spans = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.If):
+            test = node.test
+            name = test.id if isinstance(test, ast.Name) else \
+                test.attr if isinstance(test, ast.Attribute) else None
+            if name == "TYPE_CHECKING":
+                last = node.body[-1]
+                spans.append((node.lineno, getattr(last, "end_lineno",
+                                                   last.lineno)))
+    return spans
+
+
+class JaxFreePlannerRule(Rule):
+    rule_id = "FIG008"
+    severity = Severity.ERROR
+    fix_hint = ("keep planner cost/stats code pure numpy+stdlib — it runs at "
+                "ingest time, never inside a trace; duck-type core containers "
+                "instead of importing repro runtime modules")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if _SCOPE not in ctx.path.replace("\\", "/"):
+            return
+        exempt = _type_checking_spans(ctx.tree)
+
+        def exempted(node: ast.AST) -> bool:
+            return any(lo <= node.lineno <= hi for lo, hi in exempt)
+
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                mods = [a.name for a in node.names]
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:  # relative: stays inside the planner package
+                    continue
+                mods = [node.module] if node.module else []
+            else:
+                continue
+            if exempted(node):
+                continue
+            for mod in mods:
+                root = mod.split(".")[0]
+                if root in _FORBIDDEN_ROOTS:
+                    yield self.finding(
+                        ctx, node,
+                        f"planner module imports `{mod}` — figaro-plan runs "
+                        f"at ingest time and must stay jax-free")
+                elif root == "repro" and not any(
+                        mod == p or mod.startswith(p + ".")
+                        for p in _ALLOWED_REPRO):
+                    yield self.finding(
+                        ctx, node,
+                        f"planner module imports runtime module `{mod}` — "
+                        f"duck-type core containers instead (keeps the "
+                        f"planner cycle-free and jax-free)")

@@ -32,6 +32,7 @@ legacy entry point                                   Session / JoinDataset
 ===================================================  ==========================================
 ``Database.from_arrays(t)`` + ``full_reduce``        ``sess.ingest(t).join(root, edges)``
   + ``JoinTree.from_edges`` + ``build_plan``
+``join(root, edges)`` (hand-picked root)             ``join(edges, root="auto")`` (figaro-plan)
 ``figaro_qr(plan, dtype=...)``                       ``ds.qr(dtype=...)``
 ``figaro_qr_batched(plan, batch)``                   ``ds.qr(batch)`` (leading batch axis)
 ``svd_over_join(plan)``                              ``ds.svd()``
@@ -66,9 +67,13 @@ import numpy as np
 
 from repro.core.engine import FigaroEngine, default_engine, plan_for
 from repro.core.join_tree import FigaroPlan, JoinTree, build_plan
-from repro.core.plan_cache import (PlanHolder, _append_rows,
-                                   build_capacity_plan, pad_data, pad_plan)
+from repro.core.plan_cache import (PlanHolder, _append_rows, bucket_spec,
+                                   build_capacity_plan, pad_data, pad_plan,
+                                   spec_fits)
 from repro.core.relation import Database, full_reduce
+from repro.planner import (DatabaseStats, Replanner, choose_root,
+                           explain_text, rank_orientations, validate_names)
+from repro.planner.stats import normalize_edges
 from repro.train.async_serve import SERVE_KINDS, validate_serve_kind
 
 __all__ = ["Session", "TableSet", "JoinDataset", "default_session",
@@ -355,18 +360,75 @@ class Session:
 
 @dataclasses.dataclass
 class TableSet:
-    """Ingested tables awaiting a join choice: ``ingest(t).join(root, edges)``."""
+    """Ingested tables awaiting a join choice: ``ingest(t).join(edges)``."""
 
     session: Session
     db: Database
 
-    def join(self, root: str, edges, *, reduce: bool = True) -> "JoinDataset":
-        """Fix the join tree (edges in any orientation, re-rooted at
-        ``root``); ``reduce`` drops dangling tuples first (`full_reduce`),
-        which the FiGaRo pipeline requires of its inputs."""
-        db = full_reduce(self.db, list(edges)) if reduce else self.db
-        return JoinDataset(self.session,
-                           JoinTree.from_edges(db, root, list(edges)))
+    def join(self, *args, root: str | None = None, edges=None,
+             reduce: bool = True, reroot: bool | None = None,
+             hysteresis: float = 0.5) -> "JoinDataset":
+        """Fix the join tree over ``edges`` (undirected pairs, any
+        orientation) and return a `JoinDataset`.
+
+        Accepted call shapes::
+
+            join(edges)                    # root="auto": figaro-plan picks it
+            join(edges, root="auto")       # same, explicit
+            join(edges, root="Orders")     # hand-rooted
+            join("Orders", edges)          # legacy positional order
+
+        With ``root="auto"`` (or omitted) the planner
+        (`repro.planner.choose_root`) enumerates every rooted orientation of
+        the acyclic join graph and picks the cheapest under the paper's cost
+        model; ``ds.explain()`` shows the ranking. The chosen tree is built
+        through the same `JoinTree.from_edges` as a hand-rooted join, so when
+        the planner picks the root you would have picked, the plan signature
+        — and therefore the compiled executable — is identical: auto costs
+        zero extra retraces.
+
+        ``reroot`` enables adaptive re-rooting (defaults to on iff the root
+        was auto-chosen): appends update the planner's exact statistics, and
+        when growth makes another orientation cheaper by more than the
+        ``hysteresis`` margin the dataset rebuilds on it at the next drain
+        point (in-flight server futures still answer on the old plan).
+
+        ``reduce`` drops dangling tuples first (`full_reduce`), which the
+        FiGaRo pipeline requires of its inputs. Unknown relation names in
+        ``root``/``edges`` raise `ValueError` here, eagerly, listing the
+        ingested relations.
+        """
+        if len(args) == 2:  # legacy: join(root, edges)
+            pos_root, pos_edges = args
+        elif len(args) == 1:
+            # join(edges) or join(edges, root=...) — a lone str is a root
+            # (legacy partial form join("Orders", edges=...)).
+            pos_root, pos_edges = (args[0], None) \
+                if isinstance(args[0], str) else (None, args[0])
+        elif len(args) == 0:
+            pos_root, pos_edges = None, None
+        else:
+            raise TypeError(f"join() takes at most 2 positional arguments "
+                            f"(root, edges), got {len(args)}")
+        if pos_root is not None and root is not None:
+            raise TypeError("join() got multiple values for 'root'")
+        if pos_edges is not None and edges is not None:
+            raise TypeError("join() got multiple values for 'edges'")
+        root = pos_root if root is None else root
+        edges = pos_edges if edges is None else edges
+        if edges is None:
+            raise TypeError("join() is missing 'edges'")
+        edges = [tuple(e) for e in edges]
+        auto = root is None or (root == "auto"
+                                and "auto" not in self.db.relations)
+        validate_names(self.db.names, edges, None if auto else root)
+        db = full_reduce(self.db, edges) if reduce else self.db
+        if auto:
+            root = choose_root(db, edges)
+        return JoinDataset(self.session, JoinTree.from_edges(db, root, edges),
+                           edges=edges, auto=auto,
+                           reroot=auto if reroot is None else reroot,
+                           hysteresis=hysteresis)
 
 
 class JoinDataset:
@@ -391,7 +453,9 @@ class JoinDataset:
     ``append`` must be rebuilt, not silently zero-filled).
     """
 
-    def __init__(self, session: Session, tree: JoinTree):
+    def __init__(self, session: Session, tree: JoinTree, *, edges=None,
+                 auto: bool = False, reroot: bool = False,
+                 hysteresis: float = 0.5):
         self._session = session
         self._tree = tree  # pre-plan only; once built, holder.plan owns it
         # The holder is the ONE plan state for this join: servers spawned by
@@ -399,6 +463,16 @@ class JoinDataset:
         # server) is visible to both — no silent plan fork.
         self._holder = PlanHolder(
             on_regrow=None if session.bucket else self._exact_regrow)
+        # figaro-plan state: the undirected edge set (so every orientation
+        # stays reachable), whether the root was auto-chosen, the adaptive
+        # re-rooting policy, and warm capacity plans per alternative root.
+        self._edges = normalize_edges(edges if edges is not None
+                                      else tree.edges())
+        self._auto = auto
+        self._reroot_enabled = reroot
+        self._hysteresis = hysteresis
+        self._replanner: Replanner | None = None
+        self._warm_plans: dict[str, FigaroPlan] = {}
 
     # -- plan lifecycle ------------------------------------------------------
 
@@ -413,13 +487,36 @@ class JoinDataset:
         a `plan_cache.PlanHolder` — with every server from `serve()`)."""
         plan = self._holder.plan
         if plan is None:
+            if self._auto and self._holder.counters()[0] > 0:
+                # Pre-plan appends may have shifted the ranking; nothing is
+                # built yet, so re-choosing the root is free.
+                best = choose_root(self._tree.db, self._edges)
+                if best != self._tree.root:
+                    self._tree = JoinTree.from_edges(
+                        self._tree.db, best, list(self._edges))
             if self._session.bucket:
                 plan = build_capacity_plan(
                     self._tree, headroom=self._session.headroom)
             else:
                 plan = self._exact_capacity_plan(self._tree)
             self._holder.set(plan)
+            if self._auto and self._session.bucket:
+                self._warm_runner_up()
         return plan
+
+    def _warm_runner_up(self) -> None:
+        # Keep the second-cheapest orientation's capacity plan warm: pure
+        # numpy ingest + bucketing, no compile — if appends later flip the
+        # ranking, the re-root re-pads into this spec (when it still fits)
+        # instead of re-deriving capacities from scratch.
+        tree = self.tree
+        ranking = rank_orientations(tree.db, self._edges)
+        if len(ranking) < 2:
+            return
+        runner_up = ranking[1].root
+        self._warm_plans[runner_up] = build_capacity_plan(
+            JoinTree.from_edges(tree.db, runner_up, list(self._edges)),
+            headroom=self._session.headroom)
 
     def _exact_capacity_plan(self, tree: JoinTree) -> FigaroPlan:
         # Exact capacities: bit-identical numerics to the exact plan, but
@@ -446,6 +543,15 @@ class JoinDataset:
         plan has not been built yet, so there is nothing to refresh). Once
         servers exist, the refresh first drains their in-flight work, and
         they serve the refreshed plan from the next dispatch on.
+
+        With adaptive re-rooting on (``join(..., root="auto")``), each append
+        also updates the planner's exact statistics; when growth makes a
+        different orientation cheaper past the hysteresis margin, the dataset
+        rebuilds on it right here — at a drain point, so requests already
+        submitted to a live server are still answered on the old plan — and
+        returns False (the new orientation's first dispatch compiles). Column
+        layout follows the live tree: re-read ``ds.columns`` after appends
+        rather than caching it.
         """
         if self._holder.plan is None:
             rels = dict(self._tree.db.relations)
@@ -454,9 +560,74 @@ class JoinDataset:
                                f"have {sorted(rels)}")
             rels[node] = _append_rows(rels[node], keys, rows)
             self._tree = JoinTree(Database(rels), dict(self._tree.parent))
-            self._holder.note_external_append()
+            self._holder.note_external_append(
+                node, rows=int(np.atleast_2d(np.asarray(rows)).shape[0]))
             return True
-        return self._holder.refresh({node: (keys, rows)})
+        in_capacity = self._holder.refresh({node: (keys, rows)})
+        if self._reroot_enabled:
+            if self._replanner is None:
+                # First post-plan append: collect stats now (they already
+                # include the rows this refresh just ingested).
+                self._replanner = self._make_replanner()
+            else:
+                self._replanner.note_append(node, self._key_rows(node, keys))
+            proposal = self._replanner.proposal()
+            if proposal is not None:
+                self._reroot_to(proposal)
+                in_capacity = False  # new orientation => new signature
+        return in_capacity
+
+    # -- figaro-plan: explain + adaptive re-rooting --------------------------
+
+    def explain(self) -> str:
+        """Human-readable ranking of every join-tree orientation under the
+        planner's cost model (`repro.planner`), cheapest first, with the
+        winner's per-node breakdown. ``*`` marks the planner's current pick,
+        ``=`` the orientation this dataset is actually running — they can
+        differ between an append that shifts the estimates and the re-root
+        that follows (or permanently, for a hand-rooted join)."""
+        rp = self._replanner
+        ranking = rp.ranking() if rp is not None else \
+            rank_orientations(self.tree.db, self._edges)
+        return explain_text(ranking, chosen=ranking[0].root,
+                            current=self.tree.root)
+
+    def _key_rows(self, node: str, keys) -> np.ndarray:
+        attrs = self.tree.db[node].key_attrs
+        cols = [np.atleast_1d(np.asarray(keys[a], dtype=np.int64))
+                for a in attrs]
+        return np.stack(cols, axis=1) if cols else \
+            np.zeros((1, 0), dtype=np.int64)
+
+    def _make_replanner(self) -> Replanner:
+        tree = self.tree
+        return Replanner(
+            stats=DatabaseStats.collect(tree.db, self._edges),
+            names=tuple(tree.db.names), edges=self._edges,
+            current_root=tree.root, hysteresis=self._hysteresis)
+
+    def _reroot_to(self, root: str) -> None:
+        """Rebuild the capacity plan on a new orientation and swap it in at a
+        drain point (`PlanHolder.replace`). The displaced orientation's plan
+        becomes the new warm alternative."""
+        old = self._holder.plan
+        tree = JoinTree.from_edges(old.source_tree.db, root,
+                                   list(self._edges))
+        if self._session.bucket:
+            exact = build_plan(tree)
+            warm = self._warm_plans.pop(root, None)
+            cap = warm.spec if warm is not None \
+                and spec_fits(exact.spec, warm.spec) \
+                else bucket_spec(exact.spec, headroom=self._session.headroom)
+            plan = pad_plan(exact, cap)
+            plan.source_tree = tree
+            plan.capacity_headroom = self._session.headroom
+        else:
+            plan = self._exact_capacity_plan(tree)
+        self._holder.replace(plan)
+        self._warm_plans[old.source_tree.root] = old
+        if self._replanner is not None:
+            self._replanner.on_reroot(root)
 
     def stats(self) -> dict:
         """Lifecycle + compile counters: per-node capacity vs live rows,
@@ -482,6 +653,10 @@ class JoinDataset:
             "plan_built": plan is not None,
             "appends": appends,
             "regrows": regrows,
+            "root": self.tree.root,
+            "auto_root": self._auto,
+            "reroots": self._holder.reroot_count(),
+            "append_volume": self._holder.append_volumes(),
             "nodes": nodes,
             "traces": self._session.engine.trace_counts(),
             "trace_count": engine.trace_count(),
@@ -494,9 +669,11 @@ class JoinDataset:
     @property
     def columns(self) -> tuple[str, ...]:
         """Qualified global column names (``"Node.attr"``) in the plan's
-        preorder column layout."""
-        return tuple(f"{name}.{a}" for name in self._tree.preorder()
-                     for a in self._tree.db[name].data_attrs)
+        preorder column layout. Follows the *live* tree: an adaptive re-root
+        changes the preorder, and with it the column order of R."""
+        tree = self.tree
+        return tuple(f"{name}.{a}" for name in tree.preorder()
+                     for a in tree.db[name].data_attrs)
 
     def column_index(self, col) -> int:
         """Global column index of ``col``: an int (validated), a bare

@@ -77,7 +77,21 @@ class JoinTree:
                    edges: Sequence[tuple[str, str]]) -> "JoinTree":
         """Build a join tree rooted at ``root``; ``edges`` may be given in any
         orientation (they are re-oriented away from the root), so one edge set
-        can be evaluated under every join-tree choice (Table 2)."""
+        can be evaluated under every join-tree choice (Table 2).
+
+        Unknown names fail eagerly: a ``root`` or edge endpoint that is not a
+        relation of ``db`` raises a `ValueError` naming it and listing the
+        ingested relations, instead of a bare `KeyError` (or a misleading
+        not-a-tree error) deep inside tree construction."""
+        names = set(db.names)
+        unknown = sorted({n for e in edges for n in e if n not in names})
+        if root not in names and root not in unknown:
+            unknown.insert(0, root)
+        if unknown:
+            noun = "relation" if len(unknown) == 1 else "relations"
+            raise ValueError(
+                f"unknown {noun} {', '.join(map(repr, unknown))}; "
+                f"ingested relations are {sorted(names)}")
         adj: dict[str, list[str]] = {}
         for a, b in edges:
             adj.setdefault(a, []).append(b)

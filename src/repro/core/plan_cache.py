@@ -286,7 +286,8 @@ def refresh_plan(
 
 
 @shared_state({"_plan": "_lock", "_servers": "_lock",
-               "appends": "_lock", "regrows": "_lock"})
+               "appends": "_lock", "regrows": "_lock",
+               "reroots": "_lock", "append_volume": "_lock"})
 class PlanHolder:
     """Thread-safe owner of ONE current capacity plan.
 
@@ -307,6 +308,14 @@ class PlanHolder:
     overflows the current capacities: it receives the (bucket-regrown)
     refreshed plan and returns the plan to install — `repro.api` uses it to
     keep ``bucket=False`` datasets on exact capacities across regrows.
+
+    The holder also records **per-relation append volume**
+    (``append_volumes()``) — the raw signal the adaptive re-rooting policy
+    (`repro.planner.replan.Replanner`) keys off — and exposes
+    ``replace(plan)``, the drain-then-install path a re-root uses: in-flight
+    and queued requests captured the old plan at submit time
+    (`train.async_serve`), so draining first makes the orientation swap
+    invisible to every outstanding future.
     """
 
     def __init__(self, plan: FigaroPlan | None = None, *,
@@ -319,6 +328,8 @@ class PlanHolder:
         self._servers: weakref.WeakSet = weakref.WeakSet()
         self.appends = 0
         self.regrows = 0
+        self.reroots = 0
+        self.append_volume: dict[str, int] = {}
 
     @property
     def plan(self) -> FigaroPlan | None:
@@ -349,17 +360,45 @@ class PlanHolder:
         for server in servers:
             server.flush()
 
-    def note_external_append(self) -> None:
+    def note_external_append(self, node: str | None = None,
+                             rows: int = 0) -> None:
         """Count an append applied outside `refresh` (the pre-plan ingest
         path, where rows land in the source tables before the lazy first
         plan build)."""
         with self._lock:
             self.appends += 1
+            if node is not None:
+                self.append_volume[node] = \
+                    self.append_volume.get(node, 0) + int(rows)
 
     def counters(self) -> tuple[int, int]:
         """(appends, regrows) read consistently under the holder lock."""
         with self._lock:
             return self.appends, self.regrows
+
+    def reroot_count(self) -> int:
+        with self._lock:
+            return self.reroots
+
+    def append_volumes(self) -> dict[str, int]:
+        """Rows appended per relation since construction (both refresh and
+        pre-plan appends) — the growth signal adaptive re-rooting consumes."""
+        with self._lock:
+            return dict(self.append_volume)
+
+    def replace(self, plan: FigaroPlan) -> None:
+        """Drain attached servers, then install a *structurally different*
+        plan (adaptive re-root). Unlike `refresh`, the incoming plan may have
+        a new topology/orientation; the drain guarantees every request
+        submitted against the old plan is answered by it first, so the swap
+        is invisible to in-flight futures."""
+        self.drain()
+        with self._lock:
+            if self._plan is None:
+                raise ValueError("PlanHolder has no plan yet — build one "
+                                 "before replacing")
+            self._plan = plan
+            self.reroots += 1
 
     def refresh(self, new_rows_per_node) -> bool:
         """Drain attached servers, then append rows via `refresh_plan`.
@@ -376,6 +415,10 @@ class PlanHolder:
             new_plan = refresh_plan(self._plan, new_rows_per_node)
             in_capacity = new_plan.spec == self._plan.spec
             self.appends += 1
+            for name, (_, data) in new_rows_per_node.items():
+                rows = int(np.atleast_2d(np.asarray(data)).shape[0])
+                self.append_volume[name] = \
+                    self.append_volume.get(name, 0) + rows
             if not in_capacity:
                 self.regrows += 1
                 if self._on_regrow is not None:

@@ -43,7 +43,9 @@ def _rand_data(rng, m, n):
 
 def retailer_like(scale: int = 1000, *, cols: int = 4, seed: int = 0,
                   root: str = "good") -> JoinTree:
-    """Snowflake; `root` in {good, bad} mirrors Table 2's join-tree choice.
+    """Snowflake; `root` in {good, bad} mirrors Table 2's join-tree choice,
+    and ``root="auto"`` lets figaro-plan (`repro.planner.choose_root`) pick —
+    on this schema it recovers the paper's good orientation.
 
     ``figaro.Session().from_tree(retailer_like(...))`` gives the fluent
     compute handle (examples/join_ml.py runs all three ML tasks off it).
@@ -71,7 +73,7 @@ def retailer_like(scale: int = 1000, *, cols: int = 4, seed: int = 0,
                     [f"w{i}" for i in range(cols)]),
     }
     db = Database.from_arrays(tables)
-    if root == "good":
+    if root in ("good", "auto"):
         edges = [("Inventory", "Item"), ("Inventory", "Weather"),
                  ("Inventory", "Location"), ("Location", "Census")]
         rootn = "Inventory"
@@ -80,6 +82,10 @@ def retailer_like(scale: int = 1000, *, cols: int = 4, seed: int = 0,
                  ("Inventory", "Item"), ("Inventory", "Weather")]
         rootn = "Location"
     db = full_reduce(db, edges)
+    if root == "auto":
+        from repro.planner import choose_root  # jax-free, no import cycle
+
+        rootn = choose_root(db, edges)
     return JoinTree.from_edges(db, rootn, edges)
 
 

@@ -267,7 +267,14 @@ class AsyncFigaroServer:
 
     @property
     def plan(self) -> FigaroPlan:
-        """The currently-served plan — the shared holder's, never a fork."""
+        """The currently-served plan — the shared holder's, never a fork.
+
+        Every request captures this plan at *submit* time (``item.plan``),
+        and dispatch uses the captured plan — so a holder-level swap (an
+        append refresh, or an adaptive re-root via `PlanHolder.replace`)
+        never changes the plan a pending future is answered with: the swap
+        paths drain first, and anything submitted before the drain resolves
+        bit-identically to the pre-swap plan."""
         return self._holder.plan
 
     def append(self, node: str, rows) -> bool:
@@ -276,7 +283,11 @@ class AsyncFigaroServer:
         Drains in-flight work first (queued requests were validated against
         the old capacities), then refreshes the shared plan holder. Returns
         True when the refresh stayed within the plan's capacities — the next
-        dispatch reuses the cached executable, zero retraces."""
+        dispatch reuses the cached executable, zero retraces. Appends through
+        a dataset with adaptive re-rooting (``ds.append``) may additionally
+        swap the orientation at the same drain point; requests submitted
+        after the swap validate against — and are answered on — the new
+        plan's layout."""
         return self._holder.refresh({node: rows})
 
     # -- submission ----------------------------------------------------------

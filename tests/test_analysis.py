@@ -495,6 +495,60 @@ def test_fig007_out_of_scope_paths_ignored():
         FIG007_BAD, path="src/repro/sanitizer/locks.py")
 
 
+# -- FIG008 jax-free planner -------------------------------------------------
+
+FIG008_BAD = """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.join_tree import JoinTree
+
+    def score(tree):
+        return jnp.sum(jax.numpy.ones(3))
+"""
+
+FIG008_GOOD = """
+    from typing import TYPE_CHECKING
+
+    import numpy as np
+
+    from repro.planner.stats import DatabaseStats
+    from .cost import orientation_cost
+
+    if TYPE_CHECKING:
+        from repro.core.join_tree import JoinTree  # typing only: erased
+
+    def score(stats):
+        return float(np.sum([1.0]))
+"""
+
+
+def test_fig008_fires_on_jax_and_runtime_imports_in_planner():
+    msgs = [f.message for f in _findings(
+        FIG008_BAD, path="src/repro/planner/fixture.py")
+        if f.rule == "FIG008"]
+    assert any("`jax`" in m for m in msgs)
+    assert any("`jax.numpy`" in m for m in msgs)
+    assert any("repro.core.join_tree" in m and "duck-type" in m
+               for m in msgs)
+
+
+def test_fig008_quiet_on_numpy_stdlib_and_type_checking():
+    assert "FIG008" not in _rules_fired(
+        FIG008_GOOD, path="src/repro/planner/fixture.py")
+
+
+def test_fig008_out_of_scope_paths_ignored():
+    # jax imports everywhere else in the runtime are the normal state.
+    assert "FIG008" not in _rules_fired(
+        FIG008_BAD, path="src/repro/core/fixture.py")
+
+
+def test_fig008_planner_sources_are_clean():
+    findings = analyze_paths([str(REPO / "src" / "repro" / "planner")],
+                             rules=all_rules(), root=str(REPO))
+    assert [f for f in findings if f.rule == "FIG008"] == []
+
+
 def test_fix_hint_rendered_in_human_output():
     finding = next(f for f in _findings(FIG007_BAD) if f.rule == "FIG007")
     rendered = finding.render()

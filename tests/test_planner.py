@@ -1,0 +1,391 @@
+"""figaro-plan: exact statistics, the cost model's ranking properties,
+orientation invariance of the factorization, auto root choice at zero extra
+retraces, and adaptive re-rooting (hysteresis, live-server swap).
+
+The re-rooting tests use a 3-relation chain F1(x,u) - D(x,y) - F2(y,v) whose
+leaf relations carry *local* key attributes (u / v), so a leaf's distinct-key
+count K can outgrow the middle relation's — the only way a chain's cheapest
+root can move (under full reduction the middle of a pure chain always has the
+largest K). F2 is wider than F1 (8 vs 4 data columns), so appending rows to
+F2 with fresh ``v`` keys grows the cost of every orientation that has to
+project F2's block, and the ranking flips from root=F1 to root=F2.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import figaro
+from repro.core.join_tree import JoinTree
+from repro.core.relation import Database, full_reduce
+from repro.data.relational import cartesian, retailer_like, yelp_like
+from repro.planner import (DatabaseStats, Replanner, choose_root,
+                           enumerate_roots, orientation_cost, plan_cost,
+                           rank_orientations, validate_names)
+from repro.planner.cost import ROTATION_PASSES
+from repro.planner.orient import orient_edges
+from repro.planner.stats import normalize_edges, stats_for
+
+
+def _star_tables(m_fact: int = 24):
+    rng = np.random.default_rng(m_fact)
+    return {
+        "Orders": ({"cust": np.arange(m_fact) % 8,
+                    "prod": np.arange(m_fact) % 4},
+                   rng.normal(size=(m_fact, 2)), ["amount", "qty"]),
+        "Customers": ({"cust": np.arange(8)},
+                      rng.normal(size=(8, 2)), ["age", "income"]),
+        "Products": ({"prod": np.arange(4)},
+                     rng.normal(size=(4, 1)), ["price"]),
+    }
+
+
+_STAR_EDGES = [("Orders", "Customers"), ("Orders", "Products")]
+
+
+# -- statistics: exact, cached, incrementally maintained ----------------------
+
+
+def test_stats_exact_vs_numpy_ground_truth():
+    db = Database.from_arrays(_star_tables())
+    stats = DatabaseStats.collect(db, _STAR_EDGES)
+    for name in db.names:
+        rel = db[name]
+        st = stats.relations[name]
+        assert st.num_rows == rel.num_rows
+        assert st.num_data_cols == rel.num_data_cols
+        assert st.distinct_keys == np.unique(rel.keys, axis=0).shape[0]
+    # per-edge distinct counts / fan-outs against direct np.unique
+    orders = db["Orders"]
+    cust = np.unique(orders.key_col("cust")).size
+    assert stats.relations["Orders"].distinct(("cust",)) == cust
+    assert stats.edge_fan_out("Orders", "Customers") \
+        == orders.num_rows / cust
+
+
+def test_incremental_update_equals_recollect():
+    tables = _star_tables()
+    db = Database.from_arrays(tables)
+    stats = DatabaseStats.collect(db, _STAR_EDGES)
+    # append 5 Orders rows (2 duplicate keys, 3 fresh) incrementally...
+    new_keys = np.array([[0, 0], [7, 3], [9, 0], [9, 1], [11, 2]])
+    stats.update("Orders", new_keys)
+    # ...and compare to a from-scratch collection over the grown relation
+    keys, data, cols = tables["Orders"]
+    grown = dict(tables)
+    grown["Orders"] = (
+        {"cust": np.concatenate([keys["cust"], new_keys[:, 0]]),
+         "prod": np.concatenate([keys["prod"], new_keys[:, 1]])},
+        np.vstack([data, np.zeros((5, 2))]), cols)
+    fresh = DatabaseStats.collect(Database.from_arrays(grown), _STAR_EDGES)
+    st, fr = stats.relations["Orders"], fresh.relations["Orders"]
+    assert st.num_rows == fr.num_rows
+    for attrs in st.uniques:
+        np.testing.assert_array_equal(st.uniques[attrs], fr.uniques[attrs])
+    with pytest.raises(ValueError, match="columns"):
+        stats.update("Orders", np.zeros((1, 3), dtype=np.int64))
+    with pytest.raises(ValueError, match="unknown relation"):
+        stats.update("Nope", new_keys)
+
+
+def test_stats_cached_per_db_instance_and_edge_set():
+    db = Database.from_arrays(_star_tables())
+    s1 = stats_for(db, _STAR_EDGES)
+    # same edge set in any order / orientation hits the same cache entry
+    s2 = stats_for(db, [("Products", "Orders"), ("Customers", "Orders")])
+    assert s1 is s2
+    assert normalize_edges([("B", "A"), ("A", "B"), ("A", "C")]) \
+        == (("A", "B"), ("A", "C"))
+
+
+# -- cost model ---------------------------------------------------------------
+
+
+def _two_relation_db(fan_out: int, n_keys: int = 5):
+    rng = np.random.default_rng(fan_out)
+    return Database.from_arrays({
+        "A": ({"k": np.arange(n_keys)}, rng.normal(size=(n_keys, 2)),
+              ["a0", "a1"]),
+        "B": ({"k": np.repeat(np.arange(n_keys), fan_out)},
+              rng.normal(size=(n_keys * fan_out, 2)), ["b0", "b1"]),
+    })
+
+
+def test_cost_monotone_in_fan_out():
+    """Growing a relation's fan-out (rows per shared key, K fixed) strictly
+    grows the cost of every orientation."""
+    edges = [("A", "B")]
+    prev = None
+    for f in (1, 2, 4, 8):
+        db = _two_relation_db(f)
+        stats = stats_for(db, edges)
+        assert stats.edge_fan_out("B", "A") == float(f)  # exact
+        totals = {oc.root: oc.total for oc in rank_orientations(db, edges)}
+        if prev is not None:
+            assert totals["A"] > prev["A"] and totals["B"] > prev["B"]
+        prev = totals
+
+
+def test_root_pays_no_projection_pass():
+    db = Database.from_arrays(_star_tables())
+    stats = stats_for(db, _STAR_EDGES)
+    oc = orientation_cost(stats, orient_edges(db.names, _STAR_EDGES,
+                                              "Orders"))
+    for nc in oc.nodes:
+        if nc.is_root:
+            assert nc.name == "Orders" and nc.project == 0.0
+        else:
+            assert nc.project == ROTATION_PASSES * nc.K * nc.width
+    assert oc.total == pytest.approx(sum(nc.total for nc in oc.nodes))
+
+
+def test_plan_cost_matches_orientation_ranking():
+    tree = retailer_like(scale=100)
+    ranking = rank_orientations(tree.db, tree.edges())
+    by_root = {oc.root: oc.total for oc in ranking}
+    assert plan_cost(tree) == pytest.approx(by_root[tree.root])
+
+
+def test_auto_root_recovers_paper_good_orientation():
+    tree = retailer_like(scale=200, root="good")
+    assert choose_root(tree.db, tree.edges()) == "Inventory"
+    assert retailer_like(scale=200, root="auto").root == "Inventory"
+
+
+# -- orientation invariance: any root, same factorization --------------------
+
+
+@pytest.mark.parametrize("fixture", ["retailer", "yelp", "cartesian"])
+def test_singular_values_invariant_across_all_orientations(fixture):
+    """R differs between orientations only by a column permutation (and
+    signs), so its singular values must agree across every enumerated root."""
+    tree = {"retailer": lambda: retailer_like(scale=60),
+            "yelp": lambda: yelp_like(scale=40),
+            "cartesian": lambda: cartesian(6, 5)}[fixture]()
+    db, edges = tree.db, tree.edges()
+    reference = None
+    for root, _ in enumerate_roots(db.names, edges):
+        sess = figaro.Session()
+        ds = sess.ingest(db).join(edges, root=root, reduce=False)
+        r = np.asarray(ds.qr(dtype=jnp.float64), dtype=np.float64)
+        s = np.linalg.svd(r, compute_uv=False)
+        if reference is None:
+            reference = s
+        else:
+            np.testing.assert_allclose(
+                s, reference, rtol=1e-8,
+                atol=1e-10 * reference.max(),
+                err_msg=f"{fixture}: spectrum moved when rooted at {root}")
+
+
+# -- facade: eager validation, join() signature, explain ---------------------
+
+
+def test_unknown_names_raise_eager_value_error():
+    sess = figaro.Session()
+    ts = sess.ingest(_star_tables())
+    with pytest.raises(ValueError, match=r"unknown relation 'Orderz'.*"
+                                         r"ingested relations are"):
+        ts.join("Orderz", _STAR_EDGES)
+    with pytest.raises(ValueError, match="unknown relation 'Custmers'"):
+        ts.join([("Orders", "Custmers"), ("Orders", "Products")])
+    # the same message comes out of direct tree construction
+    db = full_reduce(Database.from_arrays(_star_tables()), _STAR_EDGES)
+    with pytest.raises(ValueError, match="ingested relations are"):
+        JoinTree.from_edges(db, "Orderz", _STAR_EDGES)
+    with pytest.raises(ValueError, match="unknown relations 'X', 'Y'"):
+        validate_names(db.names, [("X", "Y")])
+    # disconnected relation: named, not silently dropped
+    with pytest.raises(ValueError, match="do not connect.*Products"):
+        ts.join([("Orders", "Customers")])
+
+
+def test_join_signature_shapes_agree():
+    """join(edges) / join(edges, root="auto") / join(edges, root=r) /
+    legacy join(r, edges) all build the same tree for the same root."""
+    tables = _star_tables()
+    trees = [figaro.Session().ingest(tables).join(*a, **kw).tree
+             for a, kw in [((_STAR_EDGES,), {}),
+                           ((_STAR_EDGES,), dict(root="auto")),
+                           ((_STAR_EDGES,), dict(root="Orders")),
+                           (("Orders", _STAR_EDGES), {}),
+                           ((), dict(root="Orders", edges=_STAR_EDGES))]]
+    assert {t.root for t in trees} == {"Orders"}
+    assert {tuple(t.preorder()) for t in trees} == {tuple(trees[0].preorder())}
+    ts = figaro.Session().ingest(tables)
+    with pytest.raises(TypeError, match="missing 'edges'"):
+        ts.join("Orders")
+    with pytest.raises(TypeError, match="multiple values for 'root'"):
+        ts.join("Orders", _STAR_EDGES, root="Orders")
+    with pytest.raises(TypeError, match="multiple values for 'edges'"):
+        ts.join(_STAR_EDGES, edges=_STAR_EDGES)
+
+
+def test_explain_ranks_every_orientation():
+    tree = retailer_like(scale=100)
+    ds = figaro.Session().ingest(tree.db).join(tree.edges(), reduce=False)
+    text = ds.explain()
+    for name in tree.db.names:
+        assert f"root={name}" in text
+    assert "*" in text and "1. root=Inventory" in text
+    assert "per-node breakdown" in text
+    assert "currently running (Inventory)" in text
+
+
+# -- auto root: zero extra retraces vs the hand-rooted join ------------------
+
+
+def test_auto_join_costs_zero_extra_retraces():
+    """Hand-rooted and auto joins over the same edges build the same plan
+    signature, so on a shared engine the second compiles nothing."""
+    tree = retailer_like(scale=100, root="good")
+    sess = figaro.Session()
+    ds_hand = sess.ingest(tree.db).join(tree.edges(), root="Inventory",
+                                        reduce=False)
+    r_hand = np.asarray(ds_hand.qr(dtype=jnp.float64))
+    traces_after_hand = sess.engine.trace_count()
+    ds_auto = sess.ingest(tree.db).join(tree.edges(), reduce=False)
+    assert ds_auto.tree.root == "Inventory"
+    r_auto = np.asarray(ds_auto.qr(dtype=jnp.float64))
+    assert sess.engine.trace_count() == traces_after_hand, \
+        "root='auto' must not retrace when it picks the hand-chosen root"
+    np.testing.assert_array_equal(r_auto, r_hand)
+
+
+# -- adaptive re-rooting ------------------------------------------------------
+
+
+def _flip_tables(rng, *, f2_cols: int = 8):
+    """F1(x,u; 4 cols) - D(x,y; 1 col) - F2(y,v; f2_cols): root starts at F1
+    (largest K*width mass); F2 appends with fresh ``v`` keys move it."""
+    nx, ny, m_d, m_f1, m_f2 = 20, 15, 40, 200, 10
+    dx = rng.integers(0, nx, m_d)
+    dy = rng.integers(0, ny, m_d)
+    return {
+        "F1": ({"x": rng.choice(np.unique(dx), m_f1), "u": np.arange(m_f1)},
+               rng.normal(size=(m_f1, 4)), [f"f{i}" for i in range(4)]),
+        "D": ({"x": dx, "y": dy}, rng.normal(size=(m_d, 1)), ["d0"]),
+        "F2": ({"y": rng.choice(np.unique(dy), m_f2), "v": np.arange(m_f2)},
+               rng.normal(size=(m_f2, f2_cols)),
+               [f"g{i}" for i in range(f2_cols)]),
+    }
+
+
+_FLIP_EDGES = [("F1", "D"), ("D", "F2")]
+
+
+def _grow_f2(ds, rng, rows: int, next_v: int) -> tuple[bool, int]:
+    """Append ``rows`` F2 rows with existing y keys and fresh v keys (keeps
+    the database fully reduced: no cross-relation coordination needed)."""
+    ys = np.unique(ds.tree.db["F2"].key_col("y"))
+    in_cap = ds.append("F2", {"y": rng.choice(ys, rows),
+                              "v": np.arange(next_v, next_v + rows)},
+                       rng.normal(size=(rows, ds.tree.db["F2"].num_data_cols)))
+    return in_cap, next_v + rows
+
+
+def test_append_triggers_hysteresis_gated_reroot():
+    rng = np.random.default_rng(0)
+    sess = figaro.Session(headroom=4)
+    ds = sess.ingest(_flip_tables(rng)).join(_FLIP_EDGES, hysteresis=0.4)
+    assert ds.tree.root == "F1"
+    _ = ds.qr(dtype=jnp.float64)  # build + compile on the initial root
+    grow = np.random.default_rng(7)
+    in_cap, _ = _grow_f2(ds, grow, 400, next_v=10)
+    assert not in_cap, "a re-root must report an invalidated signature"
+    st = ds.stats()
+    assert st["root"] == "F2" and st["reroots"] == 1
+    assert st["append_volume"] == {"F2": 400}
+    assert ds.columns[0].startswith("F2."), \
+        "column order must follow the re-rooted tree's preorder"
+    # the re-rooted dataset computes the same join factorization as a fresh
+    # hand-rooted session over the same (grown) database
+    s_new = np.linalg.svd(np.asarray(ds.qr(dtype=jnp.float64)),
+                          compute_uv=False)
+    ref = figaro.Session().ingest(ds.tree.db).join(
+        _FLIP_EDGES, root="F1", reduce=False)
+    s_ref = np.linalg.svd(np.asarray(ref.qr(dtype=jnp.float64)),
+                          compute_uv=False)
+    np.testing.assert_allclose(s_new, s_ref, rtol=1e-8)
+
+
+def test_pre_plan_appends_re_choose_root_for_free():
+    """Appends before the first compute shift the planner's choice without
+    any re-root machinery — nothing is built yet."""
+    rng = np.random.default_rng(0)
+    sess = figaro.Session(headroom=4)
+    ds = sess.ingest(_flip_tables(rng)).join(_FLIP_EDGES)
+    grow = np.random.default_rng(7)
+    assert _grow_f2(ds, grow, 400, next_v=10)[0]  # table grow, no plan yet
+    _ = ds.plan
+    st = ds.stats()
+    assert st["root"] == "F2" and st["reroots"] == 0
+
+
+def test_hysteresis_blocks_marginal_flips_and_flapping():
+    # Direct policy check: a challenger inside the margin never wins.
+    rng = np.random.default_rng(0)
+    db = full_reduce(Database.from_arrays(_flip_tables(rng)), _FLIP_EDGES)
+    ranking = rank_orientations(db, _FLIP_EDGES)
+    best, second = ranking[0], ranking[1]
+    margin = second.total / best.total - 1.0
+    blocked = Replanner(stats=stats_for(db, _FLIP_EDGES),
+                        names=tuple(db.names),
+                        edges=normalize_edges(_FLIP_EDGES),
+                        current_root=second.root,
+                        hysteresis=margin + 0.05)
+    assert blocked.proposal() is None
+    eager = Replanner(stats=blocked.stats, names=blocked.names,
+                      edges=blocked.edges, current_root=second.root,
+                      hysteresis=max(margin - 0.05, 0.0))
+    assert eager.proposal() == best.root
+
+    # End to end: alternating symmetric appends must never flap the root.
+    rng = np.random.default_rng(1)
+    tables = _flip_tables(rng, f2_cols=4)  # F1 and F2 now equally wide
+    sess = figaro.Session(headroom=4)
+    ds = sess.ingest(tables).join(_FLIP_EDGES)
+    _ = ds.qr(dtype=jnp.float64)
+    root0 = ds.tree.root
+    grow = np.random.default_rng(2)
+    next_v, next_u = 10, 200
+    for _step in range(3):
+        _, next_v = _grow_f2(ds, grow, 40, next_v)
+        xs = np.unique(ds.tree.db["F1"].key_col("x"))
+        ds.append("F1", {"x": grow.choice(xs, 40),
+                         "u": np.arange(next_u, next_u + 40)},
+                  grow.normal(size=(40, 4)))
+        next_u += 40
+    st = ds.stats()
+    assert st["reroots"] == 0 and st["root"] == root0, \
+        f"alternating appends flapped the root: {st['root']}"
+
+
+def test_reroot_swap_is_invisible_to_in_flight_futures(rng):
+    """Requests submitted before an append that triggers a re-root are
+    answered on the plan they were submitted against, bit-identically;
+    requests after the swap run on the new orientation."""
+    build = np.random.default_rng(0)
+    sess = figaro.Session(headroom=4)
+    ds = sess.ingest(_flip_tables(build)).join(_FLIP_EDGES, hysteresis=0.4)
+    server = ds.serve(kind="qr", dtype=jnp.float64)
+    req = tuple(rng.normal(size=np.asarray(d).shape) for d in ds.plan.data)
+    baseline = np.asarray(server.submit(req).result(timeout=60))
+
+    server.pause()
+    in_flight = server.submit(req)  # queued against the pre-swap plan
+    grow = np.random.default_rng(7)
+    in_cap, _ = _grow_f2(ds, grow, 400, next_v=10)  # drains, then re-roots
+    assert not in_cap and ds.stats()["reroots"] == 1
+    assert in_flight.done(), "append must drain in-flight work before a swap"
+    np.testing.assert_array_equal(
+        np.asarray(in_flight.result()), baseline,
+        err_msg="in-flight future answered on the post-swap plan")
+
+    # post-swap: new capacity shapes, same served surface
+    assert server.plan is ds.plan and ds.plan.source_tree.root == "F2"
+    req_new = tuple(rng.normal(size=np.asarray(d).shape)
+                    for d in ds.plan.data)
+    r_new = np.asarray(server.submit(req_new).result(timeout=60))
+    assert r_new.shape == (ds.plan.num_cols, ds.plan.num_cols)
+    server.close()
