@@ -371,13 +371,13 @@ def run(csv: Csv, *, fast: bool = False) -> None:
         add(case, "traces_qr_batched", serve_engine.trace_count("qr_batched"))
 
     # -- figaro-lint overhead: the analysis CI job must stay interactive ----
-    # Full-repo wall time of the AST analyzer (all five rule families over
-    # src/). Pure host Python — no jit, no device. The bound is generous on
-    # purpose: tripping it means a rule went accidentally quadratic, not that
-    # the runner was busy.
+    # Full-repo wall time of the AST analyzer (every rule family over src/,
+    # including the figaro-flow interprocedural pass). Pure host Python — no
+    # jit, no device. The bound is generous on purpose: tripping it means a
+    # rule went accidentally quadratic, not that the runner was busy.
     from pathlib import Path
 
-    from repro.analysis import analyze_paths
+    from repro.analysis import analyze_paths, load_program
 
     repo = Path(__file__).resolve().parents[1]
     t0 = time.perf_counter()
@@ -390,6 +390,23 @@ def run(csv: Csv, *, fast: bool = False) -> None:
     assert t_lint < 10.0, (
         f"figaro-lint full-repo pass took {t_lint:.2f}s (>= 10s budget) — "
         f"a rule likely went quadratic")
+
+    # figaro-flow in isolation: call-graph build + jit-region marking +
+    # dataflow fixpoint over src/, reported as its own row so a regression in
+    # the interprocedural layer is visible separately from the lexical rules.
+    t0 = time.perf_counter()
+    program = load_program([str(repo / "src")], root=str(repo))
+    sinks = program.dataflow().sinks
+    t_flow = time.perf_counter() - t0
+    case = "analysis_interprocedural"
+    add(case, "wall_s", t_flow)
+    add(case, "functions", len(program.graph.functions))
+    add(case, "traced", len(program.graph.traced))
+    add(case, "roots", len(program.graph.roots))
+    add(case, "sinks", len(sinks))
+    assert t_flow < 10.0, (
+        f"figaro-flow interprocedural pass took {t_flow:.2f}s (>= 10s "
+        f"budget) — the callgraph/dataflow fixpoint likely went quadratic")
 
     # -- figaro-san overhead: disabled mode must cost (nearly) nothing ------
     # The runtime sanitizer's disabled contract is physical: the race hooks

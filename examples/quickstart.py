@@ -314,3 +314,61 @@ assert (st["auto_root"], st["reroots"]) == (True, 0)
 print(f"after append        : root={st['root']} (re-roots: {st['reroots']}, "
       f"appended rows: {st['append_volume']})")
 print("OK — figaro-plan picks the orientation; appends keep it honest.")
+
+# --- 12. figaro-flow: interprocedural analysis + writing a rule on it -------
+# Steps 9's rules are per-file; the invariants they can't see are the ones
+# that live BETWEEN files: a helper three modules away from the jit boundary
+# calling np.asarray on a traced array (FIG009), a traced function bumping a
+# module counter once per trace instead of once per call (FIG010), a buffer
+# re-read after the engine's donated dispatch consumed it (FIG011), and the
+# R0 slab-layout arithmetic drifting between join_tree/plan_cache/PlanSpec
+# (FIG012). figaro-flow (repro.analysis.callgraph + .dataflow, still pure
+# stdlib) powers them: it builds a whole-program call graph, marks every
+# function transitively reachable from an engine `_<kind>_impl`, a
+# `jax.jit`/`pallas_call` argument or a `shard_map` body as *traced-context*,
+# and runs a per-function taint fixpoint (params -> returns/effects, with
+# static/kwonly params, closure constants and .shape/.dtype metadata held
+# concrete) over that graph. Inspect the classification directly:
+#
+#   PYTHONPATH=src python -m repro.analysis --report callgraph src/
+#   PYTHONPATH=src python -m repro.analysis --report callgraph --dot flow.dot src/
+#   PYTHONPATH=src python -m repro.analysis --report callgraph --json src/
+#
+# Writing an interprocedural rule: subclass `framework.Rule` as in step 9,
+# but implement `check_program(self, program)` instead of (or on top of)
+# `check(ctx)`. The driver calls it once per run with the whole-program
+# view; `program.graph.traced` is the traced-context set with root chains,
+# `program.dataflow().sinks` the taint fixpoint's host-sync sites, and
+# `program.traced_chain(qname)` the root->function attribution a finding
+# should carry via `self.finding(..., traced_context=chain)` — it lands in
+# `--json` as `traced_context` so tooling can jump the whole chain. Per-file
+# rules get the same power through `self.program` (FIG006 uses it to verify
+# a "private helper" really has no cross-module callers before exempting
+# it). The program below shows the classification on a miniature engine:
+from repro.analysis import analyze_source, all_rules
+from repro.analysis.callgraph import Program
+from repro.analysis.framework import FileContext
+import ast as _ast
+import textwrap as _tw
+
+_MINI = _tw.dedent("""
+    import jax
+    import numpy as np
+
+    @jax.jit
+    def entry(x):
+        return helper(x)
+
+    def helper(a):
+        return np.asarray(a)      # host sync, two hops from the jit
+""")
+ctx = FileContext("src/repro/core/mini.py", _MINI, _ast.parse(_MINI))
+flow = Program([ctx])
+assert "repro.core.mini:helper" in flow.graph.traced
+hits = [f for f in analyze_source(_MINI, "src/repro/core/mini.py",
+                                  all_rules()) if f.rule == "FIG009"]
+assert hits and hits[0].traced_context == ("entry", "helper")
+print(f"figaro-flow: {len(flow.graph.functions)} fn(s), "
+      f"{len(flow.graph.traced)} traced; FIG009 chain "
+      f"{' -> '.join(hits[0].traced_context)}")
+print("OK — figaro-flow classifies the jit frontier; rules query it.")

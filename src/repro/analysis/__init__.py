@@ -28,6 +28,34 @@ the next violation before a human has to:
   FIG005  lock-discipline   mutable attributes of lock-owning classes
                             (AsyncFigaroServer, PlanHolder, FigaroEngine)
                             written outside a `with self._lock` region
+  FIG006  thread-escape     shared mutable state read/mutated without the
+                            owning lock from thread-reachable methods
+  FIG007  san-routing       sanitizer findings bypassing the SanitizerState
+                            registry/reporting chain
+  FIG008  jaxfree-planner   jax imports leaking into the planner/analysis
+                            layers that must stay stdlib-only
+  FIG009  host-sync         np.asarray/float()/.item()/.tolist()/
+                            .block_until_ready()/jax.device_get on a traced
+                            value transitively reachable from a jit region
+                            (figaro-flow: call graph + dataflow fixpoint)
+  FIG010  trace-effects     self./global/closure writes, print, counter
+                            bumps inside traced-context functions (lock-
+                            guarded trace bookkeeping exempted)
+  FIG011  donation          a buffer re-read after passing through the
+                            engine's donated data position (straight-line
+                            or loop re-dispatch)
+  FIG012  slab-layout       symbolic proofs over PlanSpec/bucket_spec/
+                            SlabBand arithmetic: row bands partition
+                            capacity rows, column prefix sums close, pow2
+                            bucketing stays canonical and total
+
+FIG009–FIG011 ride on **figaro-flow** (`repro.analysis.callgraph` +
+`repro.analysis.dataflow`): a whole-program call graph with jit-region
+inference (engine `_<kind>_impl` bodies, `jax.jit`/`pallas_call` arguments,
+`shard_map` bodies, transitively) and a per-function traced/concrete/host
+taint summary composed to a fixpoint. Inspect the classification with
+
+    python -m repro.analysis --report callgraph [--dot graph.dot] src/
 
 Pure stdlib `ast` — no third-party imports, so the CLI runs in CI without
 installing jax.  Run it:
@@ -47,11 +75,14 @@ section 9 for a walkthrough.
 """
 
 from .baseline import Baseline, load_baseline  # noqa: F401
+from .callgraph import CallGraph, Program  # noqa: F401
+from .dataflow import Dataflow  # noqa: F401
 from .framework import (Finding, Rule, Severity, analyze_paths,  # noqa: F401
-                        analyze_source)
+                        analyze_source, load_program)
 from .imports import ImportGraph, unused_report  # noqa: F401
 from .rules import all_rules  # noqa: F401
 
 __all__ = ["Finding", "Rule", "Severity", "analyze_paths", "analyze_source",
            "all_rules", "Baseline", "load_baseline", "ImportGraph",
-           "unused_report"]
+           "unused_report", "CallGraph", "Program", "Dataflow",
+           "load_program"]

@@ -10,6 +10,8 @@ Common invocations:
     python -m repro.analysis --baseline analysis_baseline.json src/   # CI
     python -m repro.analysis --warn-only benchmarks/    # advisory sweep
     python -m repro.analysis --report unused            # dead-module report
+    python -m repro.analysis --report callgraph src/    # figaro-flow graph
+    python -m repro.analysis --report callgraph --dot g.dot src/
     python -m repro.analysis --write-baseline analysis_baseline.json src/
 """
 
@@ -20,7 +22,7 @@ import json
 import sys
 
 from .baseline import empty_baseline, load_baseline, write_baseline
-from .framework import analyze_paths
+from .framework import analyze_paths, load_program
 from .imports import unused_report
 from .rules import all_rules
 
@@ -40,9 +42,14 @@ def _build_parser() -> argparse.ArgumentParser:
                         "justifications from --baseline) and exit 0")
     p.add_argument("--json", action="store_true",
                    help="machine-readable output")
-    p.add_argument("--report", choices=("findings", "unused"),
+    p.add_argument("--report", choices=("findings", "unused", "callgraph"),
                    default="findings",
-                   help="findings (default) or the unused-module report")
+                   help="findings (default), the unused-module report, or "
+                        "the figaro-flow call graph with traced/host "
+                        "classification")
+    p.add_argument("--dot", metavar="FILE",
+                   help="with --report callgraph: also write the graph as "
+                        "Graphviz DOT to FILE")
     p.add_argument("--warn-only", action="store_true",
                    help="report findings but always exit 0")
     p.add_argument("--root", default=None,
@@ -114,10 +121,28 @@ def _run_unused(args) -> int:
     return 0
 
 
+def _run_callgraph(args) -> int:
+    paths = args.paths or ["src"]
+    program = load_program(paths, root=args.root)
+    graph = program.graph
+    if args.json:
+        print(json.dumps(graph.to_json(), indent=2))
+    else:
+        print(graph.render_text())
+    if args.dot:
+        with open(args.dot, "w", encoding="utf-8") as fh:
+            fh.write(graph.render_dot())
+        if not args.json:
+            print(f"-- DOT graph written to {args.dot}")
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     args = _build_parser().parse_args(argv)
     if args.report == "unused":
         return _run_unused(args)
+    if args.report == "callgraph":
+        return _run_callgraph(args)
     return _run_findings(args)
 
 

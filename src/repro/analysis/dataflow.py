@@ -1,0 +1,456 @@
+"""figaro-flow dataflow: per-function taint summaries to a fixpoint.
+
+Forward abstract interpretation over the functions `callgraph` marked
+*traced-context*. The lattice per value:
+
+  * **traced** — derived from a jit/pallas/shard_map argument: a tracer (or
+    kernel ref) at trace time. Calling ``np.asarray`` / ``float()`` /
+    ``.item()`` on it forces a host sync under trace — FIG009's sink.
+  * **concrete** — a trace-time constant: static (kwonly/`static_argnames`)
+    parameters, closure variables of a traced function (closed over *before*
+    tracing), metadata (``x.shape``, ``x.dtype``, ``plan.spec``), results of
+    shape-only calls (``len``, ``np.shape``, ``np.result_type``).
+  * **host-escaping** — was traced, then passed through a sync sink; the sink
+    itself is the finding, downstream uses are not re-reported.
+
+A value's abstract state is ``AVal(traced, deps, host)`` where ``deps`` are
+the *parameter names* the value inherits taint from — so one local pass per
+function yields a reusable summary (params → returns), and the driver
+composes summaries over the call graph: call sites push concrete taint into
+callee parameter sets, return taint flows back through ``deps``, repeated to
+a (monotone, hence terminating) fixpoint.
+
+Precision choices are driven by the real tree: tuple targets of
+``zip``/``enumerate`` map taint elementwise (``for sp, ix, d in
+zip(plan.spec.nodes, plan.index, data)`` keeps ``sp`` concrete), a
+subscript-store of a traced value taints the containing local, and unknown
+calls (``jnp.*``) join their argument taints.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+from .callgraph import CallGraph, FunctionInfo, _last_component
+
+#: Attribute reads that yield trace-time constants even on a tracer/pytree:
+#: array metadata, and the repo's plan convention (`plan.spec` is static aux
+#: data of the FigaroPlan pytree — index/data leaves are the traced half).
+_META_ATTRS = frozenset({
+    "shape", "dtype", "ndim", "size", "itemsize", "aval", "sharding", "spec",
+})
+
+#: numpy functions that only touch metadata — not host syncs.
+_NP_META = frozenset({
+    "shape", "ndim", "size", "dtype", "result_type", "promote_types",
+    "can_cast", "issubdtype", "isscalar", "iinfo", "finfo", "index_exp",
+})
+
+#: Builtins that return trace-time constants for any argument.
+_CONCRETE_BUILTINS = frozenset({
+    "len", "range", "isinstance", "issubclass", "type", "repr", "id",
+    "callable", "hasattr",
+})
+
+#: Builtins that force a concrete value out of a tracer: host sync.
+_SYNC_BUILTINS = frozenset({"float", "int", "bool", "complex"})
+
+#: Method calls that block on device values.
+_SYNC_METHODS = frozenset({"item", "tolist", "block_until_ready"})
+
+
+@dataclasses.dataclass(frozen=True)
+class AVal:
+    traced: bool = False
+    deps: frozenset = frozenset()
+    host: bool = False
+
+
+_CONCRETE = AVal()
+
+
+def _join(*vals: AVal) -> AVal:
+    return AVal(traced=any(v.traced for v in vals),
+                deps=frozenset().union(*(v.deps for v in vals)),
+                host=any(v.host for v in vals))
+
+
+@dataclasses.dataclass(frozen=True)
+class Sink:
+    qname: str          # traced-context function containing the sink
+    node: ast.AST
+    op: str             # "np.asarray", "float()", ".item()", ...
+    expr: str           # offending expression, unparsed (truncated)
+
+
+@dataclasses.dataclass
+class DataflowResult:
+    #: function qname -> parameter names proven traced at some call site.
+    param_traced: dict[str, set[str]]
+    #: function qname -> summary of its return value.
+    returns: dict[str, AVal]
+    #: every host-sync sink found in a traced-context function.
+    sinks: list[Sink]
+
+    def returns_class(self, qname: str) -> str:
+        ret = self.returns.get(qname)
+        if ret is None:
+            return "concrete"
+        traced = ret.traced or any(d in self.param_traced.get(qname, ())
+                                   for d in ret.deps)
+        if ret.host:
+            return "host-escaping"
+        return "traced" if traced else "concrete"
+
+
+class Dataflow:
+    """Fixpoint driver: local passes over every traced-context function."""
+
+    _MAX_SWEEPS = 20   # taint is monotone; real depth is the call-chain depth
+
+    def __init__(self, graph: CallGraph) -> None:
+        self.graph = graph
+        self.param_traced: dict[str, set[str]] = {}
+        self.returns: dict[str, AVal] = {}
+
+    def run(self) -> DataflowResult:
+        domain = [q for q in self.graph.traced if q in self.graph.functions]
+        for q in domain:
+            self.param_traced.setdefault(q, set())
+        for q, root in self.graph.roots.items():
+            fi = self.graph.functions.get(q)
+            if fi is None:
+                continue
+            params = fi.params()
+            if fi.is_method():
+                params = params[1:]
+            self.param_traced[q] |= {p for p in params if p not in root.static}
+            self.param_traced[q] |= {p for p in fi.kwonly()
+                                     if p not in root.static
+                                     and root.kind != "engine-impl"}
+        sinks: list[Sink] = []
+        for _ in range(self._MAX_SWEEPS):
+            changed = False
+            sinks = []
+            for q in domain:
+                fn_pass = _FnPass(self, self.graph.functions[q])
+                fn_pass.run()
+                sinks.extend(fn_pass.sinks)
+                changed |= fn_pass.changed
+            if not changed:
+                break
+        return DataflowResult(param_traced=self.param_traced,
+                              returns=self.returns, sinks=sinks)
+
+
+class _FnPass:
+    """One forward pass over one function body. The body is executed twice so
+    loop-carried taint (an accumulator assigned late, read early) converges;
+    env updates are joins, so the second iteration is monotone."""
+
+    def __init__(self, df: Dataflow, fi: FunctionInfo) -> None:
+        self.df = df
+        self.graph = df.graph
+        self.fi = fi
+        self.mod = df.graph.modules[fi.module]
+        self.env: dict[str, AVal] = {}
+        self.ret = _CONCRETE
+        self.sinks: list[Sink] = []
+        self.changed = False
+
+    def run(self) -> None:
+        a = self.fi.node.args
+        mine = self.df.param_traced.setdefault(self.fi.qname, set())
+        for p in a.posonlyargs + a.args + a.kwonlyargs:
+            if p.arg in ("self", "cls"):
+                self.env[p.arg] = _CONCRETE
+            else:
+                self.env[p.arg] = AVal(traced=p.arg in mine,
+                                       deps=frozenset({p.arg}))
+        for p in (a.vararg, a.kwarg):
+            if p is not None:
+                self.env[p.arg] = AVal(traced=p.arg in mine,
+                                       deps=frozenset({p.arg}))
+        for _ in range(2):
+            self.sinks = []
+            self.ret = _CONCRETE
+            for stmt in self.fi.node.body:
+                self._exec(stmt)
+        old = self.df.returns.get(self.fi.qname, _CONCRETE)
+        new = _join(old, self.ret)
+        if new != old:
+            self.df.returns[self.fi.qname] = new
+            self.changed = True
+
+    def _is_traced(self, aval: AVal) -> bool:
+        mine = self.df.param_traced.get(self.fi.qname, set())
+        return aval.traced or any(d in mine for d in aval.deps)
+
+    # -- statements ----------------------------------------------------------
+
+    def _exec(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return  # nested defs are their own dataflow functions
+        if isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                self.ret = _join(self.ret, self._ev(stmt.value))
+            return
+        if isinstance(stmt, ast.Assign):
+            val = self._ev(stmt.value)
+            for tgt in stmt.targets:
+                self._assign(tgt, val, stmt.value)
+            return
+        if isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self._assign(stmt.target, self._ev(stmt.value), stmt.value)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            val = self._ev(stmt.value)
+            if isinstance(stmt.target, ast.Name):
+                self.env[stmt.target.id] = _join(
+                    self.env.get(stmt.target.id, _CONCRETE), val)
+            else:
+                self._assign(stmt.target, val, stmt.value)
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._assign_iter_target(stmt.target, stmt.iter)
+            for s in stmt.body + stmt.orelse:
+                self._exec(s)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                v = self._ev(item.context_expr)
+                if item.optional_vars is not None:
+                    self._assign(item.optional_vars, v, item.context_expr)
+            for s in stmt.body:
+                self._exec(s)
+            return
+        if isinstance(stmt, ast.If) or isinstance(stmt, ast.While):
+            self._ev(stmt.test)
+            for s in stmt.body + stmt.orelse:
+                self._exec(s)
+            return
+        if isinstance(stmt, ast.Try):
+            for s in stmt.body + stmt.orelse + stmt.finalbody:
+                self._exec(s)
+            for handler in stmt.handlers:
+                for s in handler.body:
+                    self._exec(s)
+            return
+        if isinstance(stmt, ast.Expr):
+            self._ev(stmt.value)
+            return
+        # Raise/Assert/Delete/Global/...: evaluate any child expressions so
+        # sinks inside them are still seen.
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                self._ev(child)
+
+    def _assign(self, tgt: ast.AST, val: AVal, src: ast.AST | None) -> None:
+        if isinstance(tgt, ast.Name):
+            self.env[tgt.id] = val
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            elems = self._elements(src, len(tgt.elts)) if src is not None \
+                else None
+            for i, elt in enumerate(tgt.elts):
+                self._assign(elt, elems[i] if elems else val, None)
+        elif isinstance(tgt, (ast.Subscript, ast.Attribute)):
+            # Storing a traced value INTO a container taints the container —
+            # `out[i] = segment_sum(...)` makes `out` traced.
+            base = tgt.value
+            while isinstance(base, (ast.Subscript, ast.Attribute)):
+                base = base.value
+            if isinstance(base, ast.Name):
+                self.env[base.id] = _join(
+                    self.env.get(base.id, _CONCRETE), val)
+        elif isinstance(tgt, ast.Starred):
+            self._assign(tgt.value, val, None)
+
+    def _assign_iter_target(self, tgt: ast.AST, it: ast.expr) -> None:
+        if isinstance(tgt, (ast.Tuple, ast.List)):
+            elems = self._elements(it, len(tgt.elts))
+            if elems is not None:
+                for i, elt in enumerate(tgt.elts):
+                    self._assign(elt, elems[i], None)
+                return
+        self._assign(tgt, self._ev(it), None)
+
+    def _elements(self, src: ast.AST,
+                  count: int) -> list[AVal] | None:
+        """Elementwise avals for tuple targets of zip()/enumerate()."""
+        if not isinstance(src, ast.Call) or not isinstance(src.func, ast.Name):
+            return None
+        if src.func.id == "zip":
+            vals = [self._ev(a) for a in src.args]
+            if len(vals) < count:
+                vals += [_CONCRETE] * (count - len(vals))
+            return vals[:count]
+        if src.func.id == "enumerate" and src.args:
+            inner = self._elements(src.args[0], count - 1)
+            if inner is not None:
+                return [_CONCRETE] + inner
+            return [_CONCRETE] + [self._ev(src.args[0])] * (count - 1)
+        return None
+
+    # -- expressions ---------------------------------------------------------
+
+    def _ev(self, node: ast.AST) -> AVal:
+        if isinstance(node, ast.Name):
+            # Unbound names are module globals or closure variables — both
+            # are trace-time constants of a traced function (closed over or
+            # imported before tracing).
+            return self.env.get(node.id, _CONCRETE)
+        if isinstance(node, ast.Constant):
+            return _CONCRETE
+        if isinstance(node, ast.Attribute):
+            base = self._ev(node.value)
+            if node.attr in _META_ATTRS:
+                return _CONCRETE
+            return base
+        if isinstance(node, ast.Subscript):
+            return _join(self._ev(node.value), self._ev(node.slice))
+        if isinstance(node, ast.Call):
+            return self._ev_call(node)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return _join(_CONCRETE, *[self._ev(e) for e in node.elts])
+        if isinstance(node, ast.Dict):
+            parts = [self._ev(v) for v in node.values if v is not None]
+            parts += [self._ev(k) for k in node.keys if k is not None]
+            return _join(_CONCRETE, *parts)
+        if isinstance(node, (ast.BinOp,)):
+            return _join(self._ev(node.left), self._ev(node.right))
+        if isinstance(node, ast.BoolOp):
+            return _join(*[self._ev(v) for v in node.values])
+        if isinstance(node, ast.UnaryOp):
+            return self._ev(node.operand)
+        if isinstance(node, ast.Compare):
+            return _join(self._ev(node.left),
+                         *[self._ev(c) for c in node.comparators])
+        if isinstance(node, ast.IfExp):
+            self._ev(node.test)
+            return _join(self._ev(node.body), self._ev(node.orelse))
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            for gen in node.generators:
+                self._assign_iter_target(gen.target, gen.iter)
+                for cond in gen.ifs:
+                    self._ev(cond)
+            if isinstance(node, ast.DictComp):
+                return _join(self._ev(node.key), self._ev(node.value))
+            return self._ev(node.elt)
+        if isinstance(node, ast.Lambda):
+            # Inlined into the enclosing traced function: params of a lambda
+            # handed to vmap/scan receive traced slices.
+            for p in node.args.args + node.args.kwonlyargs:
+                self.env.setdefault(p.arg, AVal(traced=True))
+            self._ev(node.body)
+            return _CONCRETE
+        if isinstance(node, ast.Starred):
+            return self._ev(node.value)
+        if isinstance(node, (ast.JoinedStr, ast.FormattedValue)):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.expr):
+                    self._ev(child)
+            return _CONCRETE
+        if isinstance(node, ast.NamedExpr):
+            val = self._ev(node.value)
+            self._assign(node.target, val, node.value)
+            return val
+        parts = [self._ev(c) for c in ast.iter_child_nodes(node)
+                 if isinstance(c, ast.expr)]
+        return _join(_CONCRETE, *parts)
+
+    def _ev_call(self, node: ast.Call) -> AVal:
+        args = [self._ev(a) for a in node.args]
+        kwargs = {kw.arg: self._ev(kw.value) for kw in node.keywords}
+        func = node.func
+
+        # Method-style sync sinks: `x.item()`, `.tolist()`,
+        # `.block_until_ready()` on a traced receiver.
+        if isinstance(func, ast.Attribute) and func.attr in _SYNC_METHODS:
+            recv = self._ev(func.value)
+            if self._is_traced(recv):
+                self._sink(node, f".{func.attr}()", func.value)
+                return AVal(host=True)
+            return recv
+
+        callee = self.graph.resolve_callable(self.fi, self.mod, func)
+        if callee is not None and callee in self.graph.functions:
+            return self._ev_program_call(node, callee, args, kwargs)
+
+        dotted = self.graph.dotted(self.mod, func) or ""
+        head = dotted.split(".", 1)[0]
+        last = _last_component(dotted)
+        joined = _join(_CONCRETE, *args, *kwargs.values())
+
+        if head == "numpy":
+            if last in _NP_META:
+                return _CONCRETE
+            if self._is_traced(joined):
+                self._sink(node, f"np.{last}", node)
+                return AVal(host=True)
+            return _CONCRETE
+        if dotted == "jax.device_get":
+            if self._is_traced(joined):
+                self._sink(node, "jax.device_get", node)
+                return AVal(host=True)
+            return _CONCRETE
+        if isinstance(func, ast.Name):
+            if func.id in _SYNC_BUILTINS and args \
+                    and self._is_traced(args[0]):
+                self._sink(node, f"{func.id}()", node.args[0])
+                return AVal(host=True)
+            if func.id in _CONCRETE_BUILTINS:
+                return _CONCRETE
+            if func.id == "getattr" and len(node.args) >= 2 \
+                    and isinstance(node.args[1], ast.Constant) \
+                    and node.args[1].value in _META_ATTRS:
+                return _CONCRETE
+        # Unknown call (jnp.*, jax.lax.*, external libs): taint flows
+        # arguments -> result, no sync implied. A method call's receiver is
+        # an argument too (`x.sum()` is as traced as x).
+        if isinstance(func, ast.Attribute):
+            joined = _join(joined, self._ev(func.value))
+        return joined
+
+    def _ev_program_call(self, node: ast.Call, callee: str,
+                         args: list[AVal],
+                         kwargs: dict[str | None, AVal]) -> AVal:
+        cf = self.graph.functions[callee]
+        params = cf.params()
+        if cf.is_method() and isinstance(node.func, ast.Attribute):
+            params = params[1:]
+        mapped: dict[str, AVal] = {}
+        for i, aval in enumerate(args):
+            if isinstance(node.args[i], ast.Starred):
+                # *data: every remaining positional param sees the splat.
+                for p in params[i:]:
+                    mapped[p] = _join(mapped.get(p, _CONCRETE), aval)
+                break
+            if i < len(params):
+                mapped[params[i]] = aval
+        valid = set(params) | set(cf.kwonly())
+        for name, aval in kwargs.items():
+            if name in valid:
+                mapped[name] = aval
+        callee_traced = self.df.param_traced.setdefault(callee, set())
+        for pname, aval in mapped.items():
+            if self._is_traced(aval) and pname not in callee_traced:
+                callee_traced.add(pname)
+                self.changed = True
+        ret = self.df.returns.get(callee, _CONCRETE)
+        traced = ret.traced or any(
+            self._is_traced(mapped[d]) for d in ret.deps if d in mapped)
+        return AVal(traced=traced, host=ret.host)
+
+    def _sink(self, node: ast.AST, op: str, expr: ast.AST) -> None:
+        try:
+            text = ast.unparse(expr)
+        except Exception:   # pragma: no cover - unparse is total on 3.9+
+            text = "<expr>"
+        if len(text) > 60:
+            text = text[:57] + "..."
+        self.sinks.append(Sink(qname=self.fi.qname, node=node, op=op,
+                               expr=text))

@@ -47,6 +47,9 @@ class Finding:
     line: int         # 1-based
     message: str
     fix_hint: str = ""
+    #: For interprocedural findings: the short-name call chain from a traced
+    #: root (engine impl / jit arg / shard_map body) to the finding site.
+    traced_context: tuple[str, ...] = ()
 
     def fingerprint(self) -> tuple[str, str, str]:
         """Baseline identity: line numbers drift with unrelated edits, so the
@@ -56,7 +59,8 @@ class Finding:
     def to_json(self) -> dict:
         return {"rule": self.rule, "severity": str(self.severity),
                 "path": self.path, "line": self.line,
-                "message": self.message, "fix_hint": self.fix_hint}
+                "message": self.message, "fix_hint": self.fix_hint,
+                "traced_context": list(self.traced_context)}
 
     def render(self) -> str:
         """Human-readable form, fix hint included on its own indented line —
@@ -158,23 +162,39 @@ def _collect_aliases(tree: ast.Module) -> dict[str, str]:
 
 
 class Rule:
-    """Base class: subclasses set the id/severity/hint and implement check."""
+    """Base class: subclasses set the id/severity/hint and implement check.
+
+    Interprocedural rules additionally implement ``check_program``, which the
+    driver calls once per run with the whole-program `Program` (call graph +
+    dataflow over every analyzed file). During a run every rule also sees the
+    program on ``self.program`` — per-file rules can use it for call-graph
+    queries (FIG006's cross-file exemption) while staying file-anchored.
+    """
 
     rule_id: str = "FIG000"
     severity: Severity = Severity.ERROR
     fix_hint: str = ""
+    #: Whole-program view, set by the driver for the duration of a run.
+    program = None
 
     def check(self, ctx: FileContext) -> Iterator[Finding]:
         raise NotImplementedError
 
+    def check_program(self, program) -> Iterator[Finding]:
+        """Whole-program pass; called once per run, after the per-file
+        passes. Default: no interprocedural findings."""
+        return iter(())
+
     def finding(self, ctx: FileContext, node: ast.AST | int, message: str,
                 *, severity: Severity | None = None,
-                fix_hint: str | None = None) -> Finding:
+                fix_hint: str | None = None,
+                traced_context: tuple[str, ...] = ()) -> Finding:
         line = node if isinstance(node, int) else getattr(node, "lineno", 1)
         return Finding(rule=self.rule_id,
                        severity=self.severity if severity is None else severity,
                        path=ctx.path, line=line, message=message,
-                       fix_hint=self.fix_hint if fix_hint is None else fix_hint)
+                       fix_hint=self.fix_hint if fix_hint is None else fix_hint,
+                       traced_context=tuple(traced_context))
 
 
 def _iter_py_files(paths: Iterable[str]) -> Iterator[str]:
@@ -198,33 +218,70 @@ def _relpath(path: str, root: str | None) -> str:
     return rel.replace(os.sep, "/")
 
 
+def _syntax_error_finding(path: str, e: SyntaxError) -> Finding:
+    return Finding(
+        rule="FIG000", severity=Severity.ERROR, path=path,
+        line=e.lineno or 1,
+        message=(f"syntax error: {e.msg} — figaro-lint cannot analyze "
+                 f"this file (suppressions use `# figaro-lint: "
+                 f"disable=FIGxxx -- reason` once it parses)"),
+        fix_hint=("fix the parse error first; FIG000 itself cannot be "
+                  "suppressed because suppression comments are read "
+                  "from the parsed file"))
+
+
+def _run_rules(items: list[tuple[FileContext, Suppressions]],
+               rules: list[Rule]) -> list[Finding]:
+    """Shared driver: per-file passes over every context, then one
+    whole-program pass per rule — all against a single `Program` built from
+    the full context set, so `analyze_source` (one-file program) and
+    `analyze_paths` (whole-tree program) share semantics."""
+    from .callgraph import Program  # deferred: callgraph imports framework
+
+    program = Program([ctx for ctx, _ in items])
+    sups = {ctx.path: sup for ctx, sup in items}
+    out: list[Finding] = []
+    seen: set[tuple[str, str, int, str]] = set()
+
+    def add(finding: Finding) -> None:
+        # Dedupe: rules that walk nested scopes can surface one defect
+        # from two enclosing scopes.
+        key = (finding.rule, finding.path, finding.line, finding.message)
+        if key in seen:
+            return
+        sup = sups.get(finding.path)
+        if sup is not None and sup.covers(finding):
+            return
+        seen.add(key)
+        out.append(finding)
+
+    try:
+        for rule in rules:
+            rule.program = program
+        for rule in rules:
+            for ctx, _ in items:
+                for finding in rule.check(ctx):
+                    add(finding)
+            for finding in rule.check_program(program):
+                add(finding)
+    finally:
+        for rule in rules:
+            rule.program = None
+    return out
+
+
 def analyze_source(source: str, path: str,
                    rules: Iterable[Rule]) -> list[Finding]:
-    """Analyze one in-memory module (the fixture-test entry point)."""
+    """Analyze one in-memory module (the fixture-test entry point). The
+    module becomes a single-file `Program`, so interprocedural rules run on
+    fixtures too — with the call graph restricted to what the file defines."""
     try:
         tree = ast.parse(source, filename=path)
     except SyntaxError as e:
-        return [Finding(
-            rule="FIG000", severity=Severity.ERROR, path=path,
-            line=e.lineno or 1,
-            message=(f"syntax error: {e.msg} — figaro-lint cannot analyze "
-                     f"this file (suppressions use `# figaro-lint: "
-                     f"disable=FIGxxx -- reason` once it parses)"),
-            fix_hint=("fix the parse error first; FIG000 itself cannot be "
-                      "suppressed because suppression comments are read "
-                      "from the parsed file"))]
+        return [_syntax_error_finding(path, e)]
     ctx = FileContext(path, source, tree)
     sup = _parse_suppressions(source)
-    out, seen = [], set()
-    for rule in rules:
-        for finding in rule.check(ctx):
-            # Dedupe: rules that walk nested scopes can surface one defect
-            # from two enclosing scopes.
-            key = (finding.rule, finding.line, finding.message)
-            if key not in seen and not sup.covers(finding):
-                seen.add(key)
-                out.append(finding)
-    return out
+    return _run_rules([(ctx, sup)], list(rules))
 
 
 def analyze_paths(paths: Iterable[str], *, rules: Iterable[Rule] | None = None,
@@ -241,18 +298,48 @@ def analyze_paths(paths: Iterable[str], *, rules: Iterable[Rule] | None = None,
     rules = list(rules)
     root = os.getcwd() if root is None else root
     findings: list[Finding] = []
+    items: list[tuple[FileContext, Suppressions]] = []
     for fpath in _iter_py_files(paths):
+        rel = _relpath(fpath, root)
         try:
             with open(fpath, encoding="utf-8") as fh:
                 source = fh.read()
         except (OSError, UnicodeDecodeError) as e:
             findings.append(Finding(
                 rule="FIG000", severity=Severity.ERROR,
-                path=_relpath(fpath, root), line=1,
+                path=rel, line=1,
                 message=f"unreadable file: {e}",
                 fix_hint="fix the file's encoding/permissions or remove it "
                          "from the analyzed paths"))
             continue
-        findings.extend(analyze_source(source, _relpath(fpath, root), rules))
+        try:
+            tree = ast.parse(source, filename=rel)
+        except SyntaxError as e:
+            findings.append(_syntax_error_finding(rel, e))
+            continue
+        items.append((FileContext(rel, source, tree),
+                      _parse_suppressions(source)))
+    findings.extend(_run_rules(items, rules))
     findings.sort(key=lambda f: (f.path, f.line, f.rule))
     return findings
+
+
+def load_program(paths: Iterable[str], *, root: str | None = None):
+    """Build the whole-program view (`callgraph.Program`) for ``paths``
+    without running any rules — the `--report callgraph` entry point.
+    Unreadable/unparsable files are skipped (they surface as FIG000 in the
+    lint run, not here)."""
+    from .callgraph import Program
+
+    root = os.getcwd() if root is None else root
+    contexts: list[FileContext] = []
+    for fpath in _iter_py_files(paths):
+        rel = _relpath(fpath, root)
+        try:
+            with open(fpath, encoding="utf-8") as fh:
+                source = fh.read()
+            tree = ast.parse(source, filename=rel)
+        except (OSError, UnicodeDecodeError, SyntaxError):
+            continue
+        contexts.append(FileContext(rel, source, tree))
+    return Program(contexts)

@@ -4,21 +4,28 @@ from __future__ import annotations
 
 from ..framework import Rule
 from .compat_pin import CompatPinRule
+from .donation import DonationRule
 from .dtype_drift import DtypeDriftRule
+from .host_sync import HostSyncRule
 from .jaxfree import JaxFreePlannerRule
 from .lock_discipline import LockDisciplineRule
 from .pallas_kernel import PallasKernelRule
 from .retrace import RetraceHazardRule
 from .san_routing import SanRoutingRule
+from .slab_layout import SlabLayoutRule
 from .thread_escape import ThreadEscapeRule
+from .trace_effects import TraceEffectsRule
 
 __all__ = ["all_rules", "CompatPinRule", "RetraceHazardRule",
            "DtypeDriftRule", "PallasKernelRule", "LockDisciplineRule",
-           "ThreadEscapeRule", "SanRoutingRule", "JaxFreePlannerRule"]
+           "ThreadEscapeRule", "SanRoutingRule", "JaxFreePlannerRule",
+           "HostSyncRule", "TraceEffectsRule", "DonationRule",
+           "SlabLayoutRule"]
 
 
 def all_rules() -> list[Rule]:
     """Fresh rule instances (rules may keep per-run state)."""
     return [CompatPinRule(), RetraceHazardRule(), DtypeDriftRule(),
             PallasKernelRule(), LockDisciplineRule(), ThreadEscapeRule(),
-            SanRoutingRule(), JaxFreePlannerRule()]
+            SanRoutingRule(), JaxFreePlannerRule(), HostSyncRule(),
+            TraceEffectsRule(), DonationRule(), SlabLayoutRule()]

@@ -1,0 +1,59 @@
+"""FIG009 — host synchronization reachable from a traced context.
+
+The paper's retrace/latency story assumes the jitted hot path never blocks on
+device values: one dispatch, one async computation. A ``np.asarray``,
+``float()``/``int()``/``.item()``/``.tolist()``/``.block_until_ready()`` or
+``jax.device_get`` applied to a *traced* value anywhere transitively inside
+an engine ``_<kind>_impl``, a ``jax.jit``/``pallas_call`` argument, or a
+``shard_map`` body either crashes at trace time (ConcretizationTypeError) or
+— worse — silently hides behind a rarely-taken branch until a TPU run hits
+it. Per-file rules cannot see this: the helper doing the sync is typically
+modules away from the jit boundary.
+
+This rule is purely a consumer of figaro-flow: `callgraph` marks the
+traced-context region, `dataflow` runs the taint fixpoint and records every
+sync sink applied to a traced-tainted value; each sink becomes a finding
+carrying the root→site call chain as ``traced_context``.
+
+Trace-time constants never fire: kwonly/`static_argnames` parameters,
+closure variables of a traced function, metadata (``x.shape``/``x.dtype``/
+``plan.spec``), and ``np.shape``-style metadata calls are all concrete in
+the dataflow lattice.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+from ..framework import FileContext, Finding, Rule, Severity
+
+
+class HostSyncRule(Rule):
+    rule_id = "FIG009"
+    severity = Severity.ERROR
+    fix_hint = ("compute the value before the dispatch boundary (host side) "
+                "or keep the traced path pure jax.numpy; if the sync is "
+                "deliberate trace-time work on a static value, make the "
+                "parameter static so the dataflow sees a constant")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        return iter(())  # whole-program rule: see check_program
+
+    def check_program(self, program) -> Iterator[Finding]:
+        flow = program.dataflow()
+        for sink in flow.sinks:
+            fi = program.graph.functions[sink.qname]
+            chain = tuple(q.split(":", 1)[1]
+                          for q in program.traced_chain(sink.qname))
+            root = program.graph.roots.get(
+                program.traced_chain(sink.qname)[0]
+                if program.traced_chain(sink.qname) else sink.qname)
+            via = f" (traced via {' -> '.join(chain)})" if len(chain) > 1 \
+                else ""
+            kind = root.kind if root is not None else "jit"
+            yield self.finding(
+                fi.ctx, sink.node,
+                f"`{sink.op}` on traced value `{sink.expr}` inside "
+                f"`{fi.short}` — host sync reachable from a {kind} "
+                f"region{via}",
+                traced_context=chain)

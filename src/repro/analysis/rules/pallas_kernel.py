@@ -12,17 +12,25 @@ Three ways a kernel site rots that nothing catches until a TPU run:
   * grid truncation: a grid entry ``m // bm`` over a dim that was not first
     padded to a multiple of ``bm`` silently drops the ragged tail rows.
     Grids must floor-divide a ceil-padded capacity (``mp = -(-m // bm) * bm``)
-    or use ``pl.cdiv`` with in-kernel masking.
+    or use ``pl.cdiv`` with in-kernel masking. Both the padding and the grid
+    may be one module-level call away: ``mp = _pad(m, bm)`` where ``_pad``'s
+    body is the ceil-mult, and ``grid=_grid(mp, np_, bm, bn)`` where
+    ``_grid`` returns a tuple — the rule follows one call level of each.
   * autotune drift: `node_fused.AUTOTUNE` block sizes are analytic; each
     entry's live tile set (4 [bm, bn] tiles: data in, two outs, plus
-    coefficient/carry slack) must fit the per-backend VMEM budget model, rows
-    must be sublane-aligned (8) and columns lane-aligned (128), and every
-    itemsize group must end with a ``None`` catch-all bound.
+    coefficient/carry slack) must fit the per-backend budget model. Keys are
+    ``(backend, itemsize, bound)`` (legacy ``(itemsize, bound)`` means tpu).
+    TPU rows must be sublane-aligned (8) / lane-aligned (128); GPU rows must
+    be power-of-two (warp-tiling). Every (backend, itemsize) group must end
+    with a ``None`` catch-all bound, and a catch-all for a narrow itemsize
+    must still fit the budget at f64 itemsize — a missing-dtype lookup falls
+    through to it.
 """
 
 from __future__ import annotations
 
 import ast
+import copy
 from typing import Iterator
 
 from ..framework import FileContext, Finding, Rule, Severity
@@ -31,9 +39,11 @@ from ..framework import FileContext, Finding, Rule, Severity
 #: two outputs, double-buffering slack). Conservative on purpose.
 _LIVE_TILES = 4
 
-#: Per-backend VMEM the live set may claim. TPU cores have ~16 MiB of VMEM;
-#: the table leaves most of it to Mosaic's own pipelining.
-VMEM_BUDGET_BYTES = {"tpu": 2 * 1024 * 1024}
+#: Per-backend memory the live tile set may claim. TPU cores have ~16 MiB of
+#: VMEM; the table leaves most of it to Mosaic's own pipelining. The GPU
+#: model is Triton shared-memory/register tiles: 256 KiB keeps the live set
+#: within an SM's shared memory across generations.
+VMEM_BUDGET_BYTES = {"tpu": 2 * 1024 * 1024, "gpu": 256 * 1024}
 
 
 def _call_name(ctx: FileContext, node: ast.Call) -> str:
@@ -95,6 +105,63 @@ def _local_tuples(fn: ast.AST) -> dict[str, ast.AST]:
     return out
 
 
+def _fn_body(fn: ast.AST) -> list[ast.stmt]:
+    """Function body with a leading docstring stripped."""
+    body = list(fn.body)
+    if body and isinstance(body[0], ast.Expr) \
+            and isinstance(body[0].value, ast.Constant) \
+            and isinstance(body[0].value.value, str):
+        body = body[1:]
+    return body
+
+
+def _module_functions(tree: ast.Module) -> dict[str, ast.FunctionDef]:
+    return {n.name: n for n in tree.body if isinstance(n, ast.FunctionDef)}
+
+
+def _pad_helper_divisors(tree: ast.Module) -> dict[str, int]:
+    """{helper: index of its divisor param} for single-expression module
+    helpers of the shape ``def f(x, b): return -(-x // b) * b`` — calling
+    one proves the result padded to a multiple of the divisor argument."""
+    out: dict[str, int] = {}
+    for name, fn in _module_functions(tree).items():
+        body = _fn_body(fn)
+        if len(body) != 1 or not isinstance(body[0], ast.Return) \
+                or body[0].value is None:
+            continue
+        div = _is_ceil_mult(body[0].value)
+        if div is None:
+            continue
+        params = [a.arg for a in fn.args.args]
+        if div in params:
+            out[name] = params.index(div)
+    return out
+
+
+def _grid_helper_tuple(tree: ast.Module, name: str) -> ast.AST | None:
+    """Return-tuple of a single-statement module helper ``def g(...):
+    return (a // b, ...)``, or None."""
+    fn = _module_functions(tree).get(name)
+    if fn is None:
+        return None
+    body = _fn_body(fn)
+    if len(body) == 1 and isinstance(body[0], ast.Return) \
+            and isinstance(body[0].value, (ast.Tuple, ast.List)):
+        return body[0].value
+    return None
+
+
+class _SubstituteNames(ast.NodeTransformer):
+    """Rewrite helper params to the caller's argument names."""
+
+    def __init__(self, mapping: dict[str, ast.expr]) -> None:
+        self.mapping = mapping
+
+    def visit_Name(self, node: ast.Name):  # noqa: N802 (ast API)
+        rep = self.mapping.get(node.id)
+        return copy.deepcopy(rep) if rep is not None else node
+
+
 class PallasKernelRule(Rule):
     rule_id = "FIG004"
     severity = Severity.ERROR
@@ -111,6 +178,7 @@ class PallasKernelRule(Rule):
 
     def _check_function(self, ctx, fn) -> Iterator[Finding]:
         padded = _padded_names(fn)
+        padded.update(self._helper_padded(ctx, fn))
         tuples = _local_tuples(fn)
         interpret_default = self._interpret_default(fn)
         for node in ast.walk(fn):
@@ -120,6 +188,25 @@ class PallasKernelRule(Rule):
                 yield from self._check_pallas_call(ctx, node, padded, tuples)
             if interpret_default == "none":
                 yield from self._check_forwarding(ctx, fn, node)
+
+    @staticmethod
+    def _helper_padded(ctx, fn) -> dict[str, str]:
+        """{var: divisor} for locals padded via a module ceil-mult helper:
+        ``mp = _pad_to(m, bm)`` proves mp a multiple of bm."""
+        helpers = _pad_helper_divisors(ctx.tree)
+        out: dict[str, str] = {}
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and isinstance(node.value, ast.Call)):
+                continue
+            idx = helpers.get(_call_name(ctx, node.value))
+            if idx is None:
+                continue
+            args = node.value.args
+            if len(args) > idx and isinstance(args[idx], ast.Name):
+                out[node.targets[0].id] = args[idx].id
+        return out
 
     @staticmethod
     def _interpret_default(fn) -> str | None:
@@ -171,9 +258,33 @@ class PallasKernelRule(Rule):
         grid = grid_kw.value
         if isinstance(grid, ast.Name):  # grid = (...) assigned earlier
             grid = tuples.get(grid.id, grid)
+        if isinstance(grid, ast.Call):  # grid=_grid_for(mp, bm, ...)
+            grid = self._resolve_grid_call(ctx, grid)
         if isinstance(grid, (ast.Tuple, ast.List)):
             for elt in grid.elts:
                 yield from self._check_grid_elt(ctx, elt, padded)
+
+    @staticmethod
+    def _resolve_grid_call(ctx, call: ast.Call) -> ast.AST:
+        """Inline a one-statement module grid helper: substitute its params
+        with the caller's argument names so the caller's padded-proof
+        applies, and re-anchor line numbers at the call site."""
+        ret = _grid_helper_tuple(ctx.tree, _call_name(ctx, call))
+        if ret is None:
+            return call
+        fn = _module_functions(ctx.tree)[_call_name(ctx, call)]
+        params = [a.arg for a in fn.args.args]
+        mapping: dict[str, ast.expr] = {}
+        for p, a in zip(params, call.args):
+            mapping[p] = a
+        for kw in call.keywords:
+            if kw.arg is not None and kw.arg in params:
+                mapping[kw.arg] = kw.value
+        inlined = _SubstituteNames(mapping).visit(copy.deepcopy(ret))
+        for sub in ast.walk(inlined):
+            if hasattr(sub, "lineno"):
+                sub.lineno = call.lineno
+        return inlined
 
     def _check_grid_elt(self, ctx, elt: ast.AST,
                         padded: dict[str, str]) -> Iterator[Finding]:
@@ -216,53 +327,88 @@ class PallasKernelRule(Rule):
             yield from self._check_autotune_dict(ctx, value)
 
     def _check_autotune_dict(self, ctx, table: ast.Dict) -> Iterator[Finding]:
-        budget = VMEM_BUDGET_BYTES["tpu"]
-        last_bound: dict[int, object] = {}
+        last_bound: dict[tuple[str, int], object] = {}
         for key, val in zip(table.keys, table.values):
             entry = self._literal_entry(key, val)
             if entry is None:
                 continue
-            itemsize, bound, bm, bn = entry
-            last_bound[itemsize] = bound
-            where = f"AUTOTUNE[({itemsize}, {bound})]"
-            if bn % 128 != 0:
+            backend, explicit, itemsize, bound, bm, bn = entry
+            where = (f"AUTOTUNE[({backend}, {itemsize}, {bound})]" if explicit
+                     else f"AUTOTUNE[({itemsize}, {bound})]")
+            budget = VMEM_BUDGET_BYTES.get(backend)
+            if budget is None:
                 yield self.finding(
                     ctx, key,
-                    f"{where}: block_cols={bn} is not lane-aligned "
-                    f"(multiple of 128)")
-            if bm % 8 != 0:
-                yield self.finding(
-                    ctx, key,
-                    f"{where}: block_rows={bm} is not sublane-aligned "
-                    f"(multiple of 8)")
+                    f"{where}: backend \"{backend}\" has no budget model — "
+                    f"table rows must target tpu or gpu")
+                continue
+            last_bound[(backend, itemsize)] = bound
+            if backend == "tpu":
+                if bn % 128 != 0:
+                    yield self.finding(
+                        ctx, key,
+                        f"{where}: block_cols={bn} is not lane-aligned "
+                        f"(multiple of 128)")
+                if bm % 8 != 0:
+                    yield self.finding(
+                        ctx, key,
+                        f"{where}: block_rows={bm} is not sublane-aligned "
+                        f"(multiple of 8)")
+            else:  # gpu: Triton warp tiling wants power-of-two blocks
+                for label, b in (("block_rows", bm), ("block_cols", bn)):
+                    if b <= 0 or b & (b - 1):
+                        yield self.finding(
+                            ctx, key,
+                            f"{where}: {label}={b} is not a power of two — "
+                            f"gpu tiles must be pow2 for warp scheduling")
             live = _LIVE_TILES * bm * bn * itemsize
             if live > budget:
                 yield self.finding(
                     ctx, key,
                     f"{where}: blocks ({bm}, {bn}) put {live // 1024} KiB "
-                    f"live in VMEM — past the {budget // 1024} KiB tpu "
+                    f"live in VMEM — past the {budget // 1024} KiB {backend} "
                     f"budget model ({_LIVE_TILES} resident tiles)",
                     fix_hint="shrink block_rows/block_cols so "
                              f"{_LIVE_TILES}*bm*bn*itemsize fits the budget")
-        for itemsize, bound in sorted(last_bound.items()):
+            elif bound is None and itemsize < 8 \
+                    and _LIVE_TILES * bm * bn * 8 > budget:
+                yield self.finding(
+                    ctx, key,
+                    f"{where}: catch-all blocks ({bm}, {bn}) exceed the "
+                    f"{budget // 1024} KiB {backend} budget at f64 itemsize "
+                    f"— a missing-dtype lookup falls through to this row",
+                    fix_hint="size the None catch-all row so "
+                             f"{_LIVE_TILES}*bm*bn*8 fits the budget")
+        for (backend, itemsize), bound in sorted(last_bound.items()):
             if bound is not None:
                 yield self.finding(
                     ctx, table,
-                    f"AUTOTUNE itemsize {itemsize} does not end with a None "
-                    f"(catch-all) width bound — wide nodes would fall "
-                    f"through the table")
+                    f"AUTOTUNE {backend} itemsize {itemsize} does not end "
+                    f"with a None (catch-all) width bound — wide nodes "
+                    f"would fall through the table")
 
     @staticmethod
     def _literal_entry(key, val):
-        if not (isinstance(key, ast.Tuple) and len(key.elts) == 2
+        """(backend, explicit, itemsize, bound, bm, bn) for a literal row.
+        Keys are ``(backend, itemsize, bound)``; legacy two-element
+        ``(itemsize, bound)`` keys mean tpu."""
+        if not (isinstance(key, ast.Tuple) and len(key.elts) in (2, 3)
                 and isinstance(val, ast.Tuple) and len(val.elts) == 2):
             return None
-        elts = [e.value if isinstance(e, ast.Constant) else None
-                for e in list(key.elts) + list(val.elts)]
-        itemsize, bound, bm, bn = elts
+        kelts = [e.value if isinstance(e, ast.Constant) else None
+                 for e in key.elts]
+        if len(kelts) == 3:
+            backend, itemsize, bound = kelts
+            explicit = True
+            if not isinstance(backend, str):
+                return None
+        else:
+            (itemsize, bound), backend, explicit = kelts, "tpu", False
+        bm, bn = [e.value if isinstance(e, ast.Constant) else None
+                  for e in val.elts]
         if not isinstance(itemsize, int) or not isinstance(bm, int) \
                 or not isinstance(bn, int):
             return None
         if bound is not None and not isinstance(bound, int):
             return None
-        return itemsize, bound, bm, bn
+        return backend, explicit, itemsize, bound, bm, bn

@@ -327,6 +327,15 @@ class ThreadEscapeRule(Rule):
             if facts is None:
                 continue
             locked_methods = _locked_methods(facts)
+            if self.program is not None:
+                # The fixed point above assumes a private method's callers
+                # are all in-class. figaro-flow makes that a real query:
+                # any `X.method` reference outside the class (another
+                # module poking the helper) voids the locked-helper
+                # exemption for that method.
+                locked_methods = {
+                    m for m in locked_methods
+                    if not self.program.external_method_refs(cls, m)}
             for acc in facts.accesses:
                 if acc.locked or acc.method in locked_methods:
                     continue

@@ -1,0 +1,241 @@
+"""FIG010 — side effects inside a traced context.
+
+A jitted body runs its Python exactly once per trace; any side effect inside
+it — ``self.attr = ...``, mutating a module global or closure container,
+``print`` — executes at *trace* time, not per call. The symptom is a counter
+that stops counting once the executable is cached, a log line that appears
+once then never again, or (with donation/async in play) a data race between
+the tracing thread and the host path. figaro-flow's traced-context marking
+makes the check direct: scan every traced function for effectful statements.
+
+Exemptions, in order of principle:
+
+  * Writes lexically inside a ``with self.<lock>`` / ``with <module_lock>``
+    region are *deliberate trace-time bookkeeping*: the engine's trace
+    counters (`FigaroEngine._bump`) and the retrace sanitizer's event log
+    (`retrace.note_trace`) run once per compilation by design, under their
+    locks. Lock attributes come from FIG005's `_lock_attrs`; module-level
+    locks are names bound to ``threading.Lock/RLock/Condition`` (or the
+    sanitizer's ``san_lock``) at module scope.
+  * An explicit allowlist pins the engine's lock-guarded counter chain by
+    qualified name — the documented escape hatch the tentpole issue calls
+    for, kept tiny on purpose.
+  * Subscript stores whose base is function-local (parameters included) are
+    fine: Pallas ref writes (``out_ref[...] = x``) and local accumulator
+    dicts are the traced computation itself, not an escaping effect.
+  * ``self`` writes inside ``__init__``/``__post_init__``/``__new__``
+    initialize a freshly constructed object, not shared state — constructing
+    a host object at trace time is the *caller's* effect, caught where the
+    object escapes.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..framework import FileContext, Finding, Rule, Severity
+from .lock_discipline import _lock_attrs
+from .thread_escape import _MUTATORS
+
+#: Trace-time bookkeeping that is lock-guarded AND deliberate: the engine's
+#: per-kind trace counters and the retrace sanitizer's note/finding chain.
+_ALLOWLIST = frozenset({
+    "repro.core.engine:FigaroEngine._bump",
+    "repro.sanitizer.retrace:note_trace",
+    "repro.sanitizer._state:SanitizerState.add_finding",
+})
+
+
+def _root_name(node: ast.AST) -> ast.Name | None:
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node if isinstance(node, ast.Name) else None
+
+
+def _local_names(fn: ast.AST) -> set[str]:
+    """Names bound in this function's own scope (params, assignments, loop
+    and with targets, comprehension targets, nested def names) — excluding
+    nested function bodies, which are their own traced functions."""
+    out: set[str] = set()
+    a = fn.args
+    for p in (a.posonlyargs + a.args + a.kwonlyargs
+              + ([a.vararg] if a.vararg else [])
+              + ([a.kwarg] if a.kwarg else [])):
+        out.add(p.arg)
+    globals_decl: set[str] = set()
+
+    def walk(node: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.add(child.name)
+                continue
+            if isinstance(child, ast.Lambda):
+                continue
+            if isinstance(child, (ast.Global, ast.Nonlocal)):
+                globals_decl.update(child.names)
+            if isinstance(child, ast.Name) and isinstance(child.ctx,
+                                                          ast.Store):
+                out.add(child.id)
+            walk(child)
+
+    walk(fn)
+    return out - globals_decl
+
+
+class TraceEffectsRule(Rule):
+    rule_id = "FIG010"
+    severity = Severity.ERROR
+    fix_hint = ("hoist the side effect out of the traced region (do it in "
+                "the host-side dispatcher), return the value instead of "
+                "mutating shared state, or — for deliberate trace-time "
+                "bookkeeping — guard it with the owning lock")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        return iter(())  # whole-program rule: see check_program
+
+    def check_program(self, program) -> Iterator[Finding]:
+        graph = program.graph
+        for qname in sorted(graph.traced):
+            if qname in _ALLOWLIST:
+                continue
+            fi = graph.functions[qname]
+            mod = graph.modules[fi.module]
+            self_locks = _lock_attrs(fi.ctx, fi.cls) \
+                if fi.cls is not None else set()
+            scan = _EffectScanner(fi, self_locks, mod.module_locks,
+                                  _local_names(fi.node))
+            chain = tuple(q.split(":", 1)[1]
+                          for q in program.traced_chain(qname))
+            via = f" (traced via {' -> '.join(chain)})" if len(chain) > 1 \
+                else ""
+            for node, what in scan.effects:
+                yield self.finding(
+                    fi.ctx, node,
+                    f"`{fi.short}` {what} inside a traced context — the "
+                    f"effect runs once per trace, not per call{via}",
+                    traced_context=chain)
+
+
+class _EffectScanner:
+    """Lexical walk with a lock-held flag, FIG005/FIG006-style."""
+
+    def __init__(self, fi, self_locks: set[str], module_locks: set[str],
+                 local: set[str]) -> None:
+        self.fi = fi
+        self.self_locks = self_locks
+        self.module_locks = module_locks
+        self.local = local
+        # In a constructor, `self` IS the fresh local object.
+        self.own_self = fi.node.name in ("__init__", "__post_init__",
+                                         "__new__")
+        self.effects: list[tuple[ast.AST, str]] = []
+        for stmt in fi.node.body:
+            self._walk(stmt, locked=False)
+
+    def _walk(self, stmt: ast.stmt, locked: bool) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            holds = locked or self._holds_lock(stmt)
+            for inner in stmt.body:
+                self._walk(inner, holds)
+            return
+        self._check_stmt(stmt, locked)
+        for inner in ast.iter_child_nodes(stmt):
+            if isinstance(inner, ast.stmt):
+                self._walk(inner, locked)
+            elif isinstance(inner, ast.ExceptHandler) or (
+                    hasattr(ast, "match_case")
+                    and isinstance(inner, ast.match_case)):
+                for s in inner.body:
+                    self._walk(s, locked)
+
+    def _holds_lock(self, stmt) -> bool:
+        for item in stmt.items:
+            expr = item.context_expr
+            if isinstance(expr, ast.Call):
+                expr = expr.func
+            if isinstance(expr, ast.Attribute) \
+                    and isinstance(expr.value, ast.Name) \
+                    and expr.value.id == "self" \
+                    and expr.attr in self.self_locks:
+                return True
+            if isinstance(expr, ast.Name) and expr.id in self.module_locks:
+                return True
+        return False
+
+    def _check_stmt(self, stmt: ast.stmt, locked: bool) -> None:
+        if locked:
+            return
+        targets: list[ast.AST] = []
+        if isinstance(stmt, ast.Assign):
+            targets = list(stmt.targets)
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            targets = [stmt.target]
+        for tgt in targets:
+            for t in (tgt.elts if isinstance(tgt, (ast.Tuple, ast.List))
+                      else [tgt]):
+                self._check_target(t)
+        for node in ast.walk(stmt) if isinstance(stmt, ast.Expr) else ():
+            if isinstance(node, ast.Call):
+                self._check_call(node)
+        # Calls buried in non-Expr statements (e.g. `x = log(print(y))`)
+        # still matter for print/mutators:
+        if not isinstance(stmt, ast.Expr):
+            for node in _own_exprs(stmt):
+                if isinstance(node, ast.Call):
+                    self._check_call(node)
+
+    def _check_target(self, t: ast.AST) -> None:
+        if isinstance(t, ast.Attribute) and isinstance(t.value, ast.Name) \
+                and t.value.id == "self":
+            if not self.own_self:
+                self.effects.append((t, f"writes `self.{t.attr}`"))
+            return
+        if isinstance(t, ast.Name) and t.id not in self.local:
+            self.effects.append((t, f"writes global/closure name `{t.id}`"))
+            return
+        if isinstance(t, (ast.Subscript, ast.Attribute)):
+            root = _root_name(t)
+            if root is not None and root.id == "self":
+                if not self.own_self:
+                    self.effects.append((t, "writes through `self`"))
+            elif root is not None and root.id not in self.local:
+                self.effects.append(
+                    (t, f"mutates global/closure container `{root.id}`"))
+
+    def _check_call(self, node: ast.Call) -> None:
+        func = node.func
+        if isinstance(func, ast.Name) and func.id == "print":
+            self.effects.append((node, "calls print()"))
+            return
+        if isinstance(func, ast.Attribute) and func.attr in _MUTATORS:
+            recv = func.value
+            if isinstance(recv, ast.Attribute) \
+                    and isinstance(recv.value, ast.Name) \
+                    and recv.value.id == "self":
+                self.effects.append(
+                    (node, f"mutates `self.{recv.attr}` (.{func.attr})"))
+                return
+            root = _root_name(recv)
+            if root is not None and root.id != "self" \
+                    and root.id not in self.local:
+                self.effects.append(
+                    (node,
+                     f"mutates global/closure `{root.id}` (.{func.attr})"))
+
+
+def _own_exprs(stmt: ast.stmt):
+    """Expressions evaluated by this statement itself (child statements and
+    deferred bodies excluded)."""
+    stack = [c for c in ast.iter_child_nodes(stmt)
+             if isinstance(c, ast.expr) and not isinstance(c, ast.Lambda)]
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr) \
+                    and not isinstance(child, ast.Lambda):
+                stack.append(child)

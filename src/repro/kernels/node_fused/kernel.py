@@ -25,10 +25,14 @@ Accumulation is f32 for ≤32-bit I/O and f64 for f64 I/O (f64 pipelines run in
 interpret mode on this container, where the wider carry is free; on TPU
 hardware the engine dispatches f32).
 
-Grid/block sizing comes from the `AUTOTUNE` table: narrow nodes take taller
-row blocks (fewer carry hand-offs per stripe), wide nodes take wider column
-stripes (fewer row walks), and f64 tiles halve the row block to keep the live
-set of four [bm, bn] tiles inside a ~2 MB VMEM budget.
+Grid/block sizing comes from the `AUTOTUNE` table, keyed by
+``(backend, itemsize, width bound)``: narrow nodes take taller row blocks
+(fewer carry hand-offs per stripe), wide nodes take wider column stripes
+(fewer row walks), and f64 tiles halve the row block. TPU rows keep the live
+set of four [bm, bn] tiles inside a ~2 MB VMEM budget; GPU (Triton) rows are
+power-of-two tiles sized for a 256 KiB shared-memory/register budget, small
+enough that even an f64 fall-through fits. Backends without their own rows
+(CPU interpret mode) reuse the TPU shapes.
 """
 
 from __future__ import annotations
@@ -40,25 +44,45 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# (itemsize, width bound) -> (block_rows, block_cols). Buckets are checked in
-# order; `None` is the catch-all bound each itemsize must end with.
-AUTOTUNE: dict[tuple[int, int | None], tuple[int, int]] = {
-    (4, 128): (512, 128),
-    (4, 512): (256, 256),
-    (4, None): (128, 512),
-    (8, 128): (256, 128),
-    (8, 512): (128, 256),
-    (8, None): (64, 512),
+from repro.kernels import _platform
+
+# (backend, itemsize, width bound) -> (block_rows, block_cols). Buckets are
+# checked in order; `None` is the catch-all bound each (backend, itemsize)
+# group must end with.
+AUTOTUNE: dict[tuple[str, int, int | None], tuple[int, int]] = {
+    ("tpu", 4, 128): (512, 128),
+    ("tpu", 4, 512): (256, 256),
+    ("tpu", 4, None): (128, 512),
+    ("tpu", 8, 128): (256, 128),
+    ("tpu", 8, 512): (128, 256),
+    ("tpu", 8, None): (64, 512),
+    ("gpu", 4, 128): (128, 128),
+    ("gpu", 4, 512): (64, 256),
+    ("gpu", 4, None): (16, 512),
+    ("gpu", 8, 128): (64, 128),
+    ("gpu", 8, 512): (32, 256),
+    ("gpu", 8, None): (16, 512),
 }
 
 
-def choose_blocks(n: int, dtype) -> tuple[int, int]:
-    """(block_rows, block_cols) for an n-wide node from the autotune table."""
+def choose_blocks(n: int, dtype, backend: str | None = None) -> tuple[int, int]:
+    """(block_rows, block_cols) for an n-wide node from the autotune table.
+
+    ``backend`` defaults to the platform backend (trace-time constant via
+    `_platform.backend`); backends without their own table rows — CPU
+    interpret mode — reuse the tpu shapes.
+    """
+    if backend is None:
+        backend = _platform.backend()
+    if not any(be == backend for be, _, _ in AUTOTUNE):
+        backend = "tpu"
     itemsize = 8 if jnp.dtype(dtype).itemsize >= 8 else 4
-    for (isz, bound), blocks in AUTOTUNE.items():
-        if isz == itemsize and (bound is None or n <= bound):
+    for (be, isz, bound), blocks in AUTOTUNE.items():
+        if be == backend and isz == itemsize \
+                and (bound is None or n <= bound):
             return blocks
-    raise AssertionError("AUTOTUNE must end each itemsize with a None bound")
+    raise AssertionError(
+        "AUTOTUNE must end each (backend, itemsize) with a None bound")
 
 
 def _shift_down(x: jnp.ndarray, off: int) -> jnp.ndarray:

@@ -665,3 +665,530 @@ def test_unused_report_on_synthetic_package(tmp_path):
     assert classes["repro.tested"] == "external-only"
     assert classes["repro.dead"] == "orphan"
     assert report["orphans"] == ["repro.dead"]
+
+
+# -- figaro-flow: call graph -------------------------------------------------
+
+import ast as _ast  # noqa: E402
+
+from repro.analysis.callgraph import Program  # noqa: E402
+from repro.analysis.framework import FileContext, load_program  # noqa: E402
+
+
+def _program(*files):
+    """Program over in-memory (path, source) modules."""
+    ctxs = []
+    for path, source in files:
+        src = textwrap.dedent(source)
+        ctxs.append(FileContext(path, src, _ast.parse(src)))
+    return Program(ctxs)
+
+
+def test_callgraph_aliased_import_resolution():
+    prog = _program(
+        ("src/repro/core/alib.py", """
+            def helper(x):
+                return x + 1
+        """),
+        ("src/repro/core/blib.py", """
+            from repro.core.alib import helper as h
+
+            def caller(x):
+                return h(x)
+        """))
+    edges = prog.graph.edges["repro.core.blib:caller"]
+    assert "repro.core.alib:helper" in edges
+
+
+def test_callgraph_self_dispatch_and_jit_decorator():
+    prog = _program(("src/repro/core/eng.py", """
+        import jax
+
+        class Eng:
+            def _qr_impl(self, plan, data):
+                return self._one(data)
+
+            def _one(self, d):
+                return d
+
+        @jax.jit
+        def fast(x):
+            return slow(x)
+
+        def slow(x):
+            return x
+
+        def host(x):
+            return x
+    """))
+    g = prog.graph
+    assert "repro.core.eng:Eng._one" in g.edges["repro.core.eng:Eng._qr_impl"]
+    assert g.roots["repro.core.eng:Eng._qr_impl"].kind == "engine-impl"
+    assert g.roots["repro.core.eng:fast"].kind == "jax.jit"
+    # Transitivity: slow is traced via fast; host stays host.
+    assert "repro.core.eng:slow" in g.traced
+    assert "repro.core.eng:Eng._one" in g.traced
+    assert "repro.core.eng:host" not in g.traced
+
+
+def test_callgraph_shard_map_and_function_arg_roots():
+    prog = _program(("src/repro/core/dist.py", """
+        from repro.compat import shard_map
+
+        def body(block):
+            return combine(block)
+
+        def combine(b):
+            return b
+
+        def launch(mesh, x):
+            return shard_map(body, mesh=mesh)(x)
+    """))
+    g = prog.graph
+    assert g.roots["repro.core.dist:body"].kind == "shard_map"
+    assert "repro.core.dist:combine" in g.traced
+
+
+def test_callgraph_report_renders_classification():
+    prog = _program(("src/repro/core/eng.py", """
+        import jax
+
+        @jax.jit
+        def fast(x):
+            return x
+    """))
+    text = prog.graph.render_text()
+    assert "traced root [jax.jit]" in text
+    dot = prog.graph.render_dot()
+    assert "digraph figaro_flow" in dot and "fast" in dot
+    js = prog.graph.to_json()
+    assert js["functions"]["repro.core.eng:fast"]["root"] == "jax.jit"
+
+
+def test_load_program_over_repo_src():
+    prog = load_program([str(REPO / "src" / "repro" / "analysis")],
+                        root=str(REPO))
+    assert len(prog.graph.functions) > 50
+    # The analysis package is jax-free: no traced regions at all.
+    assert not prog.graph.roots
+
+
+# -- FIG009 host sync (figaro-flow dataflow) ---------------------------------
+
+FIG009_BAD_CHAIN = """
+    import jax
+    import numpy as np
+
+    @jax.jit
+    def entry(x):
+        return level1(x)
+
+    def level1(a):
+        return level2(a * 2)
+
+    def level2(b):
+        return np.asarray(b)
+"""
+
+FIG009_GOOD_META = """
+    import jax
+    import numpy as np
+
+    @jax.jit
+    def entry(x):
+        rows = int(x.shape[0])
+        return level1(x, rows)
+
+    def level1(a, rows):
+        return a * rows
+"""
+
+FIG009_GOOD_HOST = """
+    import numpy as np
+
+    def host_path(x):
+        return np.asarray(x)
+"""
+
+
+def test_fig009_fires_through_three_deep_chain():
+    findings = [f for f in _findings(FIG009_BAD_CHAIN)
+                if f.rule == "FIG009"]
+    assert findings, "np.asarray on traced value two calls deep must fire"
+    f = findings[0]
+    assert "np.asarray" in f.message
+    # The dataflow fixpoint attributes the sink to level2, traced via the
+    # root chain.
+    assert f.traced_context[0] == "entry"
+    assert f.traced_context[-1] == "level2"
+    assert f.to_json()["traced_context"] == list(f.traced_context)
+
+
+def test_fig009_metadata_and_host_paths_quiet():
+    assert "FIG009" not in _rules_fired(FIG009_GOOD_META)
+    assert "FIG009" not in _rules_fired(FIG009_GOOD_HOST)
+
+
+def test_fig009_static_kwonly_param_is_concrete():
+    src = """
+        class Eng:
+            _STATIC = {"qr": ("panel",)}
+
+            def _qr_impl(self, plan, data, *, panel):
+                cols = int(panel)
+                return data * cols
+    """
+    assert "FIG009" not in _rules_fired(src)
+
+
+def test_fig009_item_sink_on_traced_value():
+    src = """
+        import jax
+
+        @jax.jit
+        def f(x):
+            return float(x.sum())
+    """
+    findings = [f for f in _findings(src) if f.rule == "FIG009"]
+    assert findings and "float()" in findings[0].message
+
+
+# -- FIG010 trace effects ----------------------------------------------------
+
+FIG010_BAD = """
+    import jax
+
+    CALLS = []
+
+    @jax.jit
+    def f(x):
+        CALLS.append(1)
+        print("tracing")
+        return x * 2
+"""
+
+FIG010_BAD_SELF = """
+    class Eng:
+        def _qr_impl(self, plan, data):
+            self.count = self.count + 1
+            return data
+"""
+
+FIG010_GOOD_LOCKED = """
+    import threading
+    import jax
+
+    _lock = threading.Lock()
+    COUNT = [0]
+
+    @jax.jit
+    def f(x):
+        with _lock:
+            COUNT[0] += 1
+        return x * 2
+"""
+
+FIG010_GOOD_LOCAL = """
+    import jax
+
+    @jax.jit
+    def f(x):
+        acc = []
+        acc.append(x)
+        out = {}
+        out["y"] = x * 2
+        return out["y"]
+"""
+
+
+def test_fig010_fires_on_global_mutation_and_print():
+    msgs = [f.message for f in _findings(FIG010_BAD) if f.rule == "FIG010"]
+    joined = "\n".join(msgs)
+    assert "CALLS" in joined
+    assert "print" in joined
+
+
+def test_fig010_fires_on_self_write_in_impl():
+    findings = [f for f in _findings(FIG010_BAD_SELF)
+                if f.rule == "FIG010"]
+    assert findings and "self.count" in findings[0].message
+
+
+def test_fig010_lock_guarded_and_local_state_quiet():
+    assert "FIG010" not in _rules_fired(FIG010_GOOD_LOCKED)
+    assert "FIG010" not in _rules_fired(FIG010_GOOD_LOCAL)
+
+
+# -- FIG011 donation after dispatch ------------------------------------------
+
+FIG011_BAD_STRAIGHT = """
+    def run(plan, batch):
+        eng = FigaroEngine()
+        r = eng.qr(plan, batch)
+        return batch, r
+"""
+
+FIG011_BAD_LOOP = """
+    def stream(plan, buf, n):
+        eng = FigaroEngine()
+        outs = []
+        for _ in range(n):
+            outs.append(eng.r0(plan, buf))
+        return outs
+"""
+
+FIG011_GOOD_NO_DONATE = """
+    def run(plan, batch):
+        eng = FigaroEngine(donate_data=False)
+        r = eng.qr(plan, batch)
+        return batch, r
+"""
+
+FIG011_GOOD_REBIND = """
+    def stream(plan, batches, n):
+        eng = FigaroEngine()
+        outs = []
+        for buf in batches:
+            outs.append(eng.r0(plan, buf))
+        return outs
+"""
+
+FIG011_GOOD_FACTORY = """
+    def run(plan, batch):
+        eng = default_engine()
+        r = eng.qr(plan, batch)
+        return batch, r
+"""
+
+
+def test_fig011_fires_on_read_after_donating_dispatch():
+    findings = [f for f in _findings(FIG011_BAD_STRAIGHT)
+                if f.rule == "FIG011"]
+    assert findings and "donated data position" in findings[0].message
+
+
+def test_fig011_fires_on_loop_without_rebind():
+    findings = [f for f in _findings(FIG011_BAD_LOOP)
+                if f.rule == "FIG011"]
+    assert findings and "never rebinds" in findings[0].message
+
+
+def test_fig011_quiet_on_non_donating_and_rebinding_paths():
+    assert "FIG011" not in _rules_fired(FIG011_GOOD_NO_DONATE)
+    assert "FIG011" not in _rules_fired(FIG011_GOOD_REBIND)
+    assert "FIG011" not in _rules_fired(FIG011_GOOD_FACTORY)
+
+
+# -- FIG012 slab layout proofs -----------------------------------------------
+
+FIG012_STALE_BUMP = """
+    import dataclasses
+
+    def layout(specs, preorder, make):
+        row_acc = 0
+        for i in reversed(preorder):
+            sp = specs[i]
+            specs[i] = dataclasses.replace(sp, tail_row0=row_acc,
+                                           out_row0=row_acc + sp.m)
+            row_acc += sp.m
+        return make(r0_rows=row_acc,
+                    total_rows=sum(sp.m for sp in specs))
+"""
+
+FIG012_STALE_OUT = """
+    import dataclasses
+
+    def layout(specs, preorder, make):
+        row_acc = 0
+        for i in reversed(preorder):
+            sp = specs[i]
+            specs[i] = dataclasses.replace(sp, tail_row0=row_acc,
+                                           out_row0=row_acc)
+            row_acc += sp.m + sp.K
+        return make(r0_rows=row_acc,
+                    total_rows=sum(sp.m for sp in specs))
+"""
+
+FIG012_GOOD_LAYOUT = """
+    import dataclasses
+
+    def layout(specs, preorder, make):
+        row_acc = 0
+        for i in reversed(preorder):
+            sp = specs[i]
+            specs[i] = dataclasses.replace(sp, tail_row0=row_acc,
+                                           out_row0=row_acc + sp.m)
+            row_acc += sp.m + sp.K
+        total_rows = sum(sp.m for sp in specs)
+        return make(r0_rows=row_acc, total_rows=total_rows)
+"""
+
+FIG012_BAD_BAND = """
+    def bands(nodes, preorder):
+        out = []
+        for i in reversed(preorder):
+            sp = nodes[i]
+            out.append(SlabBand(node=i, kind="tail", row0=sp.out_row0,
+                                rows=sp.m, col0=sp.col_start, width=sp.n))
+        return out
+"""
+
+FIG012_BAD_POW2 = """
+    def next_pow2(x):
+        return 1 << int(x).bit_length()
+"""
+
+FIG012_BAD_PARTIAL_BUCKET = """
+    import dataclasses
+
+    def bucket(spec):
+        return [dataclasses.replace(sp, m=next_pow2(sp.m),
+                                    K=sp.K + 1)
+                for sp in spec.nodes]
+"""
+
+FIG012_BAD_COL = """
+    def columns(order, widths):
+        col_start = {}
+        acc = 0
+        for nme in order:
+            col_start[nme] = acc + 1
+            acc += widths[nme]
+        num_cols = acc
+        return col_start, num_cols
+"""
+
+FIG012_GOOD_COL = """
+    def columns(order, widths):
+        col_start = {}
+        acc = 0
+        for nme in order:
+            col_start[nme] = acc
+            acc += widths[nme]
+        num_cols = acc
+        return col_start, num_cols
+"""
+
+
+def test_fig012_stale_row_bump_fires():
+    msgs = [f.message for f in _findings(FIG012_STALE_BUMP)
+            if f.rule == "FIG012"]
+    assert any("advance by" in m for m in msgs)
+
+
+def test_fig012_stale_out_row0_fires():
+    msgs = [f.message for f in _findings(FIG012_STALE_OUT)
+            if f.rule == "FIG012"]
+    assert any("out_row0" in m for m in msgs)
+
+
+def test_fig012_canonical_layout_quiet():
+    assert "FIG012" not in _rules_fired(FIG012_GOOD_LAYOUT)
+
+
+def test_fig012_band_contract_violation_fires():
+    msgs = [f.message for f in _findings(FIG012_BAD_BAND)
+            if f.rule == "FIG012"]
+    assert any("tail_row0" in m for m in msgs)
+
+
+def test_fig012_noncanonical_pow2_fires():
+    msgs = [f.message for f in _findings(FIG012_BAD_POW2)
+            if f.rule == "FIG012"]
+    assert any("canonical" in m for m in msgs)
+
+
+def test_fig012_partial_bucketing_fires():
+    msgs = [f.message for f in _findings(FIG012_BAD_PARTIAL_BUCKET)
+            if f.rule == "FIG012"]
+    assert any("`K`" in m for m in msgs)
+
+
+def test_fig012_column_prefix_sums():
+    assert "FIG012" in _rules_fired(FIG012_BAD_COL)
+    assert "FIG012" not in _rules_fired(FIG012_GOOD_COL)
+
+
+def test_fig012_real_layout_modules_prove_clean():
+    findings = analyze_paths(
+        [str(REPO / "src" / "repro" / "core" / "join_tree.py"),
+         str(REPO / "src" / "repro" / "core" / "plan_cache.py")],
+        root=str(REPO))
+    assert [f for f in findings if f.rule == "FIG012"] == []
+
+
+# -- FIG004 upgrades: backend rows + grid one call level ---------------------
+
+FIG004_AUTOTUNE_GPU_BAD = """
+    AUTOTUNE = {
+        ("gpu", 4, 128): (96, 128),
+        ("gpu", 4, None): (32, 512),
+        ("gpu", 8, None): (16, 512),
+    }
+"""
+
+FIG004_AUTOTUNE_GPU_GOOD = """
+    AUTOTUNE = {
+        ("gpu", 4, 128): (128, 128),
+        ("gpu", 4, None): (16, 512),
+        ("gpu", 8, 128): (64, 128),
+        ("gpu", 8, None): (16, 512),
+    }
+"""
+
+FIG004_GRID_HELPERS_GOOD = """
+    from repro.kernels._platform import resolve_interpret
+    from jax.experimental import pallas as pl
+
+    def _pad_to(x, b):
+        return -(-x // b) * b
+
+    def _grid_for(mp, np_, bm, bn):
+        return (np_ // bn, mp // bm)
+
+    def launch(kernel, m, n, bm, bn, interpret=None):
+        mp = _pad_to(m, bm)
+        np_ = _pad_to(n, bn)
+        return pl.pallas_call(
+            kernel, grid=_grid_for(mp, np_, bm, bn),
+            interpret=resolve_interpret(interpret))
+"""
+
+FIG004_GRID_HELPERS_BAD = """
+    from repro.kernels._platform import resolve_interpret
+    from jax.experimental import pallas as pl
+
+    def _grid_for(m, n, bm, bn):
+        return (n // bn, m // bm)
+
+    def launch(kernel, m, n, bm, bn, interpret=None):
+        return pl.pallas_call(
+            kernel, grid=_grid_for(m, n, bm, bn),
+            interpret=resolve_interpret(interpret))
+"""
+
+
+def test_fig004_gpu_rows_power_of_two_and_f64_catchall():
+    msgs = [f.message for f in _findings(FIG004_AUTOTUNE_GPU_BAD)
+            if f.rule == "FIG004"]
+    joined = "\n".join(msgs)
+    assert "power of two" in joined        # (96, 128)
+    assert "f64 itemsize" in joined        # (4, None)=(32,512) at 8 bytes
+
+
+def test_fig004_gpu_good_table_quiet():
+    assert "FIG004" not in _rules_fired(FIG004_AUTOTUNE_GPU_GOOD)
+
+
+def test_fig004_grid_through_helpers():
+    assert "FIG004" not in _rules_fired(FIG004_GRID_HELPERS_GOOD)
+    msgs = [f.message for f in _findings(FIG004_GRID_HELPERS_BAD)
+            if f.rule == "FIG004"]
+    assert any("floor-divides" in m for m in msgs)
+
+
+def test_real_autotune_table_passes_budget_model():
+    findings = analyze_paths(
+        [str(REPO / "src" / "repro" / "kernels" / "node_fused" /
+             "kernel.py")], root=str(REPO))
+    assert [f for f in findings if f.rule == "FIG004"] == []
